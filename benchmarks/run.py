@@ -1,0 +1,54 @@
+"""Benchmark driver: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (stdout) plus human tables.
+``--quick`` shrinks op counts for CI-speed runs.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller op counts (CI)")
+    ap.add_argument("--only", default="",
+                    help="comma list: table1,fig10,fig11,fig12,fig13,"
+                         "fig14,fig15,fig16")
+    args = ap.parse_args(argv)
+    from benchmarks import paper_figs as F
+
+    n = 2_048 if args.quick else 6_144
+    sel = set(args.only.split(",")) if args.only else None
+    rows = []
+
+    def want(name):
+        return sel is None or name in sel
+
+    if want("table1"):
+        rows += F.table1_one_sided(n_ops=n)
+    if want("fig10"):
+        rows += F.fig10_11_breakdown(0.99, "10", n_ops=n)
+    if want("fig11"):
+        rows += F.fig10_11_breakdown(0.0, "11", n_ops=n)
+    if want("fig12"):
+        rows += F.fig12_range(n_ops=max(512, n // 4))
+    if want("fig13"):
+        threads = (128, 512, 2048) if args.quick else \
+            (128, 256, 512, 1024, 2048)
+        rows += F.fig13_scalability(threads)
+    if want("fig14"):
+        rows += F.fig14_internal(n_ops=n)
+    if want("fig15"):
+        rows += F.fig15_sensitivity()
+    if want("fig16"):
+        rows += F.fig16_hocl()
+
+    print("\n# CSV")
+    for r in rows:
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+"""End-to-end training driver: a ~135M-param LM for a few hundred steps.
+
+Thin CLI over repro.launch.train (checkpoint/resume, straggler watchdog,
+optional int8 gradient compression all included):
+
+    # fast CPU demo (reduced config):
+    PYTHONPATH=src python examples/train_lm.py --steps 300 --reduced
+
+    # the real smollm-135m (sized for a TPU host):
+    PYTHONPATH=src python examples/train_lm.py --steps 300 \
+        --batch 32 --seq 1024
+"""
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    main()

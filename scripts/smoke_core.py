@@ -1,0 +1,69 @@
+"""Quick functional shakeout of the Sherman core (not a pytest)."""
+import numpy as np
+
+from repro.core import ShermanIndex, TreeConfig, OracleIndex
+
+rng = np.random.default_rng(0)
+cfg = TreeConfig(n_ms=2, nodes_per_ms=512, fanout=8, n_locks_per_ms=1024,
+                 max_height=6, n_cs=2)
+
+base_keys = rng.choice(100_000, size=200, replace=False)
+base_vals = rng.integers(0, 1_000_000, size=200)
+idx = ShermanIndex.build(cfg, base_keys, base_vals)
+oracle = OracleIndex()
+oracle.insert_batch(base_keys, base_vals)
+
+# lookups of present + absent keys
+q = np.concatenate([base_keys[:50], np.array([100_001, 100_002])])
+vals, found = idx.lookup(q)
+for k, v, f in zip(q, vals, found):
+    ov = oracle.lookup(int(k))
+    assert (ov is not None) == bool(f), (k, ov, f)
+    if ov is not None:
+        assert ov == v, (k, ov, v)
+print("lookup OK")
+
+# inserts with updates + collisions + splits
+for it in range(10):
+    ks = rng.integers(0, 100_000, size=64)
+    vs = rng.integers(0, 1_000_000, size=64)
+    idx.insert(ks, vs)
+    oracle.insert_batch(ks, vs)
+vals, found = idx.lookup(np.asarray(oracle.items())[:, 0][:500])
+items = oracle.items()[:500]
+for (k, ov), v, f in zip(items, vals, found):
+    assert f and ov == v, (k, ov, v, f)
+print("insert OK  splits:", idx.counters["leaf_splits"],
+      "internal:", idx.counters["internal_splits"],
+      "root:", idx.counters["root_splits"])
+
+# deletes
+del_keys = np.asarray([k for k, _ in oracle.items()[:40]])
+idx.delete(del_keys)
+oracle.delete_batch(del_keys)
+vals, found = idx.lookup(del_keys)
+assert not found.any(), found.sum()
+print("delete OK")
+
+# range
+lo = np.asarray([0, 5_000, 50_000], np.int32)
+rk, rv, rn = idx.range(lo, count=16)
+for i, l in enumerate(lo):
+    want = oracle.range(int(l), 16)
+    got = [(int(a), int(b)) for a, b in zip(rk[i][:rn[i]], rv[i][:rn[i]])]
+    assert got == want, (l, got[:5], want[:5])
+print("range OK")
+
+# heavy skew: everyone hits the same keys (contention path)
+hot = rng.integers(0, 50, size=256) + 777_000
+idx.insert(hot, hot * 2)
+for k in np.unique(hot):
+    oracle.insert(int(k), int(k) * 2)
+# last-lane-wins semantics: value should equal oracle's (same rule)
+vals, found = idx.lookup(np.unique(hot))
+assert found.all()
+assert (vals == np.unique(hot) * 2).all()
+print("contention OK  handovers:", idx.counters["handovers"])
+print("sim throughput: %.2f Mops, p99 write %.1f us" %
+      (idx.throughput_mops(), idx.latency_percentiles()[99]))
+print("ALL OK")

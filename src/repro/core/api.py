@@ -1,0 +1,226 @@
+"""Public API of the Sherman index.
+
+``ShermanIndex`` is the component a database (or the serving stack in
+:mod:`repro.launch.serve`) embeds: batched insert/delete/lookup/range with
+the paper's full write path, plus per-phase netsim pricing so every paper
+metric (throughput, latency percentiles, round trips, write bytes, retries)
+falls out of normal use.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import netsim, ops, write
+from repro.core.netsim import (FG_PLUS, SHERMAN, Features, IndexCacheSim,
+                               NetConfig)
+from repro.core.ref import OracleIndex
+from repro.core.tree import TreeConfig, TreeState, bulkload, empty_state
+from repro.core.write import RepairQueue
+
+__all__ = ["ShermanIndex", "TreeConfig", "Features", "FG_PLUS", "SHERMAN",
+           "OracleIndex"]
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def _jit_write_phase(cfg, st, keys, vals, is_delete, active, cs, repair):
+    return write.write_phase(cfg, st, keys, vals, is_delete, active, cs,
+                             repair)
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def _jit_lookup(cfg, st, keys):
+    return ops.lookup_batch(cfg, st, keys)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 3, 4))
+def _jit_range(cfg, st, lo, count, max_leaves):
+    return ops.range_batch(cfg, st, lo, count, max_leaves)
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def _jit_repair(cfg, st, repair):
+    st, repair, ni, nr = write.run_repair(cfg, st, repair, iters=2)
+    return st, repair, ni, nr
+
+
+class ShermanIndex:
+    """A write-optimized ordered index over a disaggregated node pool."""
+
+    def __init__(self, cfg: TreeConfig, state: TreeState,
+                 features: Features = SHERMAN,
+                 net: Optional[NetConfig] = None,
+                 cache_bytes: int = 64 << 20):
+        self.cfg = cfg
+        self.state = state
+        self.features = features
+        self.net = net or NetConfig()
+        self.cache = IndexCacheSim(cache_bytes, cfg.node_bytes)
+        self.counters = {
+            "phases": 0, "write_ops": 0, "read_ops": 0, "leaf_splits": 0,
+            "internal_splits": 0, "root_splits": 0, "split_same_ms": 0,
+            "cas_msgs": 0, "handovers": 0, "msgs": 0, "bytes": 0.0,
+            "sim_time_s": 0.0,
+        }
+        self.latencies_write: list[np.ndarray] = []
+        self.latencies_read: list[np.ndarray] = []
+        self.rtts_write: list[np.ndarray] = []
+        self.write_bytes: list[np.ndarray] = []
+        self._repair = RepairQueue.empty(1)
+
+    # -- constructors --------------------------------------------------
+    @classmethod
+    def build(cls, cfg: TreeConfig, keys, vals, fill: float = 0.8,
+              **kw) -> "ShermanIndex":
+        return cls(cfg, bulkload(cfg, keys, vals, fill=fill), **kw)
+
+    @classmethod
+    def empty(cls, cfg: TreeConfig, **kw) -> "ShermanIndex":
+        return cls(cfg, bulkload(cfg, np.zeros(0), np.zeros(0)), **kw)
+
+    # -- helpers --------------------------------------------------------
+    def _cs_of(self, n: int) -> jnp.ndarray:
+        """Lane -> compute-server assignment (contiguous blocks)."""
+        per = max(1, -(-n // self.cfg.n_cs))
+        return (jnp.arange(n, dtype=jnp.int32) // per) % self.cfg.n_cs
+
+    def _price_write(self, stats: write.WriteStats, active, leaf_np):
+        height = int(self.state.height)
+        parents = leaf_np  # cache keyed by leaf's level-1 parent ~ leaf id
+        hits = self.cache.access(parents)
+        sd = dict(
+            active=np.asarray(active),
+            local_rank=np.asarray(stats.local_rank),
+            node_rank=np.asarray(stats.node_rank),
+            node_size=np.asarray(stats.node_size),
+            split_lane=np.zeros(len(leaf_np), bool),
+            cache_hit=hits, height=height,
+        )
+        priced = netsim.price_write_phase(
+            sd, self.features, self.net, self.cfg.n_ms,
+            self.cfg.entry_bytes, self.cfg.node_bytes)
+        self.latencies_write.append(priced["latency_s"])
+        self.rtts_write.append(priced["rtts"])
+        self.write_bytes.append(priced["write_bytes"])
+        c = self.counters
+        c["phases"] += 1
+        c["cas_msgs"] += priced["cas_msgs"]
+        c["msgs"] += priced["msgs"]
+        c["bytes"] += priced["bytes"]
+        c["sim_time_s"] += priced["makespan_s"]
+        c["leaf_splits"] += int(stats.n_leaf_splits)
+        c["internal_splits"] += int(stats.n_internal_splits)
+        c["root_splits"] += int(stats.n_root_splits)
+        c["split_same_ms"] += int(stats.n_split_same_ms)
+        c["handovers"] += int(stats.handovers)
+
+    # -- write ops -------------------------------------------------------
+    def _write(self, keys, vals, is_delete, max_phases: int = 8):
+        keys = jnp.asarray(keys, jnp.int32)
+        n = keys.shape[0]
+        if n == 0:
+            return
+        vals = jnp.asarray(vals, jnp.int32) if vals is not None else \
+            jnp.zeros((n,), jnp.int32)
+        is_del = jnp.broadcast_to(jnp.asarray(is_delete, bool), (n,))
+        cs = self._cs_of(n)
+        active = jnp.ones((n,), bool)
+        if self._repair.valid.shape[0] != n:
+            self._carry_repair(n)
+        for _ in range(max_phases):
+            self.state, done, stats, self._repair = _jit_write_phase(
+                self.cfg, self.state, keys, vals, is_del, active, cs,
+                self._repair)
+            self._price_write(stats, np.asarray(active),
+                              np.asarray(stats.leaf))
+            self.counters["write_ops"] += int(np.asarray(active).sum())
+            active = active & ~done
+            if not bool(jnp.any(active)):
+                break
+        if bool(jnp.any(active)):
+            raise RuntimeError("write batch did not converge; "
+                               "pool exhausted or max_phases too low")
+        self.drain_repairs()
+
+    def _carry_repair(self, n: int):
+        old = self._repair
+        fresh = RepairQueue.empty(n)
+        k = min(n, old.sep.shape[0])
+        self._repair = RepairQueue(
+            sep=fresh.sep.at[:k].set(old.sep[:k]),
+            child=fresh.child.at[:k].set(old.child[:k]),
+            level=fresh.level.at[:k].set(old.level[:k]),
+            valid=fresh.valid.at[:k].set(old.valid[:k]))
+
+    def drain_repairs(self, max_iters: int = 16):
+        """Complete any outstanding B-link half-splits."""
+        for _ in range(max_iters):
+            if not bool(jnp.any(self._repair.valid)):
+                return
+            self.state, self._repair, ni, nr = _jit_repair(
+                self.cfg, self.state, self._repair)
+            self.counters["internal_splits"] += int(ni)
+            self.counters["root_splits"] += int(nr)
+        if bool(jnp.any(self._repair.valid)):
+            raise RuntimeError("repair queue did not drain")
+
+    def insert(self, keys, vals):
+        """Insert or update (the paper's combined 'insert')."""
+        self._write(keys, vals, False)
+
+    def delete(self, keys):
+        self._write(keys, None, True)
+
+    # -- read ops ----------------------------------------------------------
+    def lookup(self, keys):
+        keys = jnp.asarray(keys, jnp.int32)
+        res = _jit_lookup(self.cfg, self.state, keys)
+        hits = self.cache.access(np.asarray(res.leaf))
+        priced = netsim.price_read_phase(
+            dict(active=np.ones(keys.shape[0], bool), cache_hit=hits,
+                 height=int(self.state.height)),
+            self.features, self.net, self.cfg.n_ms, self.cfg.node_bytes)
+        self.latencies_read.append(priced["latency_s"])
+        self.counters["read_ops"] += keys.shape[0]
+        self.counters["msgs"] += int(np.asarray(priced["rtts"]).sum())
+        self.counters["bytes"] += priced["bytes"]
+        self.counters["sim_time_s"] += priced["makespan_s"]
+        return np.asarray(res.value), np.asarray(res.found)
+
+    def range(self, lo, count: int, max_leaves: Optional[int] = None):
+        lo = jnp.asarray(lo, jnp.int32)
+        if max_leaves is None:
+            # Leaves may be sparse (deletes don't merge — §5.3 notes the same
+            # partial-occupancy artifact), so scan generously.
+            max_leaves = max(4, count)
+        res = _jit_range(self.cfg, self.state, lo, count, max_leaves)
+        n_leaves = np.asarray(res.leaves_read)
+        priced = netsim.price_read_phase(
+            dict(active=np.ones(lo.shape[0], bool),
+                 cache_hit=np.ones(lo.shape[0], bool),
+                 retries=n_leaves - 1, height=int(self.state.height)),
+            self.features, self.net, self.cfg.n_ms, self.cfg.node_bytes)
+        self.latencies_read.append(priced["latency_s"])
+        self.counters["read_ops"] += lo.shape[0]
+        self.counters["sim_time_s"] += priced["makespan_s"]
+        return (np.asarray(res.keys), np.asarray(res.vals),
+                np.asarray(res.n))
+
+    # -- reporting ---------------------------------------------------------
+    def latency_percentiles(self, kind: str = "write"):
+        arrs = self.latencies_write if kind == "write" else \
+            self.latencies_read
+        if not arrs:
+            return {}
+        lat = np.concatenate(arrs)
+        return {p: float(np.percentile(lat, p)) * 1e6
+                for p in (50, 90, 99)}   # µs
+
+    def throughput_mops(self) -> float:
+        t = self.counters["sim_time_s"]
+        n = self.counters["write_ops"] + self.counters["read_ops"]
+        return n / t / 1e6 if t else float("inf")

@@ -1,0 +1,152 @@
+"""HOCL — hierarchical on-chip lock, adapted to batched SIMD execution.
+
+The paper's lock hierarchy (§4.3):
+
+* GLT  — per-MS lock array in NIC on-chip SRAM, acquired with 16-bit masked
+  RDMA_CAS, released with RDMA_WRITE.
+* LLT  — per-CS local lock table with FIFO wait queues; threads of one CS
+  queue locally instead of spamming remote CAS, and a released lock is
+  *handed over* to the next local waiter (≤ MAX_DEPTH = 4 consecutive
+  handovers) saving the remote acquisition round trip.
+
+SIMD adaptation (DESIGN.md §2/§8): a batch lane ≡ a client thread; lanes are
+grouped by (compute server, target node).  A local group of size k is exactly
+a local wait queue of depth k: its ops are applied FIFO by one representative
+and cost ``ceil(k / (MAX_DEPTH+1))`` remote lock cycles — the first acquire
+plus one fresh acquire each time the handover chain hits the depth cap.
+Cross-CS contention on a node serializes the per-CS groups; the serialization
+*rank* of each group feeds the netsim queueing model (failed-CAS retries for
+the no-HOCL baseline, queue depth for tail latency).
+
+Everything here is pure shape-static JAX so it runs inside the jitted write
+phase and under shard_map.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tree import TreeConfig
+
+
+class Groups(NamedTuple):
+    """Conflict-group decomposition of a batch of node-targeted ops.
+
+    All arrays are in *lane* order unless suffixed ``_sorted``.
+    """
+    perm: jax.Array              # [B] lanes sorted by (node, cs, lane)
+    inv: jax.Array               # [B] inverse permutation
+    local_rank: jax.Array        # [B] FIFO rank inside the (cs, node) group
+    local_size: jax.Array        # [B] size of own (cs, node) group
+    local_head: jax.Array        # [B] bool — first lane of local group
+    node_rank: jax.Array         # [B] rank inside the node group
+    node_size: jax.Array         # [B] size of own node group
+    node_head: jax.Array         # [B] bool — first lane of node group
+    cs_rank: jax.Array           # [B] serialization rank of own CS's group
+    n_cs_on_node: jax.Array      # [B] #distinct CSs contending for the node
+    lock_cycles: jax.Array       # [B] remote lock acquisitions by own group
+    n_node_groups: jax.Array     # [] distinct nodes targeted
+    n_local_groups: jax.Array    # [] distinct (cs, node) pairs
+
+
+def _ids_from_flags(flags: jax.Array) -> jax.Array:
+    """Group ids (0-based) from per-position new-group flags, sorted order."""
+    return jnp.cumsum(flags.astype(jnp.int32)) - 1
+
+
+def _segment_stat(values, seg_ids, num_segments, combine="sum"):
+    fn = {"sum": jax.ops.segment_sum, "min": jax.ops.segment_min,
+          "max": jax.ops.segment_max}[combine]
+    return fn(values, seg_ids, num_segments=num_segments)
+
+
+def group_by_node(cfg: TreeConfig, node: jax.Array, cs: jax.Array,
+                  active: jax.Array) -> Groups:
+    """Decompose a batch into HOCL conflict groups.
+
+    Inactive lanes are parked on a sentinel node id so they never collide
+    with real groups (and are excluded from all counters).
+    """
+    b = node.shape[0]
+    lane = jnp.arange(b, dtype=jnp.int32)
+    big = jnp.int32(cfg.n_nodes)             # sentinel beyond any node id
+    node_k = jnp.where(active, node, big + lane)   # unique parking spots
+
+    perm = jnp.lexsort((lane, cs, node_k))
+    inv = jnp.argsort(perm)
+    ns = node_k[perm]
+    cssrt = cs[perm]
+    act_s = active[perm]
+
+    prev_node = jnp.concatenate([jnp.full((1,), -2, ns.dtype), ns[:-1]])
+    prev_cs = jnp.concatenate([jnp.full((1,), -2, cssrt.dtype), cssrt[:-1]])
+    new_node = ns != prev_node
+    new_local = new_node | (cssrt != prev_cs)
+
+    node_gid = _ids_from_flags(new_node)
+    local_gid = _ids_from_flags(new_local)
+    ones = jnp.ones((b,), jnp.int32)
+
+    node_size_g = _segment_stat(ones, node_gid, b)
+    local_size_g = _segment_stat(ones, local_gid, b)
+    node_start_g = _segment_stat(lane, node_gid, b, "min")     # sorted pos
+    local_start_g = _segment_stat(lane, local_gid, b, "min")
+
+    pos = lane                                        # position in sorted order
+    node_rank_s = pos - node_start_g[node_gid]
+    local_rank_s = pos - local_start_g[local_gid]
+
+    # serialization rank of each (cs,node) group among groups on same node:
+    # count local-group heads on this node before me.
+    head_flag = new_local.astype(jnp.int32)
+    heads_before = jnp.cumsum(head_flag) - head_flag
+    node_first_head = _segment_stat(heads_before + head_flag, node_gid, b,
+                                    "min")[node_gid]
+    cs_rank_s = (heads_before + head_flag) - node_first_head
+    n_cs_on_node_s = _segment_stat(head_flag, node_gid, b)[node_gid]
+
+    # remote lock cycles of the local group: first acquire + re-acquire after
+    # every MAX_DEPTH handovers (paper lines 24-28).
+    k = local_size_g[local_gid]
+    cycles_s = (k + cfg.handover_max) // (cfg.handover_max + 1)
+
+    def unsort(x):
+        return x[inv]
+
+    n_node_groups = jnp.sum(new_node & act_s)
+    n_local_groups = jnp.sum(new_local & act_s)
+    return Groups(
+        perm=perm, inv=inv,
+        local_rank=unsort(local_rank_s), local_size=unsort(k),
+        local_head=unsort(new_local),
+        node_rank=unsort(node_rank_s),
+        node_size=unsort(node_size_g[node_gid]),
+        node_head=unsort(new_node),
+        cs_rank=unsort(cs_rank_s),
+        n_cs_on_node=unsort(n_cs_on_node_s),
+        lock_cycles=unsort(cycles_s),
+        n_node_groups=n_node_groups, n_local_groups=n_local_groups,
+    )
+
+
+def lock_phase_stats(cfg: TreeConfig, g: Groups, active: jax.Array):
+    """Scalar lock-plane counters for one write phase (netsim inputs)."""
+    act = active
+    zero = jnp.int32(0)
+    sel = lambda x: jnp.where(act, x, zero)
+    # Sherman/HOCL: remote CAS issued once per lock cycle by group heads.
+    hocl_cas = jnp.sum(jnp.where(act & g.local_head, g.lock_cycles, zero))
+    # handovers: ops served without a remote acquisition
+    handovers = jnp.sum(sel(g.local_size * 0 + 1)) - jnp.sum(
+        jnp.where(act & g.local_head, g.lock_cycles, zero))
+    # no-hierarchy baseline: every op CASes remotely; a lane at global node
+    # rank r burns ~r failed attempts while the r earlier ops hold the lock.
+    flat_cas = jnp.sum(sel(g.node_rank + 1))
+    # queue depth distribution drives tail latency in netsim
+    max_node_group = jnp.max(jnp.where(act, g.node_size, zero))
+    max_cs_depth = jnp.max(jnp.where(act, g.cs_rank, zero))
+    return dict(hocl_remote_cas=hocl_cas, handovers=handovers,
+                flat_remote_cas=flat_cas, max_node_group=max_node_group,
+                max_cs_depth=max_cs_depth)

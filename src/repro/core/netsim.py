@@ -1,0 +1,211 @@
+"""Network cost model: prices structural phase counters in RDMA terms.
+
+The container has no RDMA fabric, so — exactly like the paper explains its
+own numbers in §5.5 — performance is *derived* from measured structural
+metrics (round trips, message counts, write bytes, conflict-group shapes).
+The functional plane (what the tree does) is real JAX execution; this module
+only attaches times to it.
+
+Constants (paper sources):
+  * RTT ≈ 2 µs for small one-sided verbs at 100 Gbps (§2.2)
+  * RDMA_WRITE rate: >50 Mops for IO ≤ 128 B, bandwidth-bound above (Fig. 3)
+  * on-chip RDMA_CAS ≈ 110 Mops — no PCIe at MS side (§4.3)
+  * host-memory RDMA_CAS needs 2 PCIe transactions; conflicting commands on
+    the same NIC bucket serialize on that PCIe time (§3.2.2, Fig. 2)
+
+Queueing model (documented in DESIGN.md §5): ops contending for one node
+lock serialize FIFO under HOCL (wait = rank × hold).  Without the local
+lock hierarchy, waiters spin with random success, burning one CAS per hold
+interval — so CAS traffic on a hot lock grows ~quadratically with the group
+size, which is precisely the Fig. 2 collapse.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Features:
+    """Sherman's technique toggles — the Fig. 10/11 ablation axis."""
+    combine: bool = True       # command combination (§4.5)
+    onchip: bool = True        # GLT in NIC on-chip memory (§4.3)
+    hierarchical: bool = True  # LLT + wait queues + handover (§4.3)
+    twolevel: bool = True      # two-level versions, unsorted leaves (§4.4)
+
+    def label(self) -> str:
+        steps = [("C", self.combine), ("O", self.onchip),
+                 ("H", self.hierarchical), ("V", self.twolevel)]
+        return "".join(s for s, on in steps if on) or "FG+"
+
+
+FG_PLUS = Features(False, False, False, False)
+SHERMAN = Features(True, True, True, True)
+ABLATION_LADDER = [
+    ("FG+", FG_PLUS),
+    ("+Combine", Features(True, False, False, False)),
+    ("+On-Chip", Features(True, True, False, False)),
+    ("+Hierarchical", Features(True, True, True, False)),
+    ("+2-Level Ver", SHERMAN),
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class NetConfig:
+    rtt_s: float = 2e-6              # one-sided verb round trip
+    nic_bw_Bps: float = 12.5e9       # 100 Gbps
+    nic_iops_small: float = 50e6     # ≤128 B messages (Fig. 3)
+    small_io_bytes: int = 128
+    cas_onchip_s: float = 1 / 110e6  # service time per on-chip CAS
+    cas_pcie_s: float = 0.9e-6       # two PCIe transactions (host CAS)
+    handover_max: int = 4
+
+
+def _msg_time(n_msgs, total_bytes, n_ms, net: NetConfig):
+    """NIC occupancy of a message stream spread over n_ms servers."""
+    iops = n_msgs / (n_ms * net.nic_iops_small)
+    bw = total_bytes / (n_ms * net.nic_bw_Bps)
+    return max(iops, bw)
+
+
+def price_write_phase(stats: dict, feat: Features, net: NetConfig,
+                      n_ms: int, entry_bytes: int, node_bytes: int):
+    """Price one write phase.
+
+    ``stats`` holds numpy views of WriteStats.  Returns a dict with per-op
+    latency array (seconds), makespan, throughput, plus internal metrics
+    (round trips per op, write bytes per op, CAS retries) matching the
+    paper's §5.5 reporting.
+    """
+    act = np.asarray(stats["active"], bool)
+    n = int(act.sum())
+    if n == 0:
+        return dict(latency_s=np.zeros(0), makespan_s=0.0, mops=0.0,
+                    rtts=np.zeros(0), write_bytes=np.zeros(0),
+                    cas_msgs=0, msgs=0, bytes=0)
+
+    local_rank = np.asarray(stats["local_rank"])[act]
+    node_rank = np.asarray(stats["node_rank"])[act]
+    node_size = np.asarray(stats["node_size"])[act]
+    split_lane = np.asarray(stats["split_lane"], bool)[act]
+    cache_hit = np.asarray(stats["cache_hit"], bool)[act]
+    height = int(stats["height"])
+    m = float(np.max(node_size, initial=1))          # hottest-node fan-in
+
+    # ---- per-op round trips (paper §3.2.1 / §5.5.2) ----
+    read_rtts = np.where(cache_hit, 1, height)      # leaf read (+ traversal)
+    if feat.hierarchical:
+        # group head acquires; handover recipients skip the remote acquire,
+        # with a fresh acquire every MAX_DEPTH+1 ops (paper lines 24-28)
+        lock_rtts = (local_rank % (net.handover_max + 1) == 0).astype(int)
+    else:
+        lock_rtts = np.ones(n, int)
+    write_rtts = 1 if feat.combine else 2           # write-back [+ unlock]
+    rtts = read_rtts + lock_rtts + write_rtts
+    # splits: sibling + parent updates; same-MS sibling rides the combined
+    # command list (§4.5), priced at phase level below
+    rtts = rtts + np.where(split_lane, 2, 0)
+
+    # ---- lock plane (the Fig. 2 physics) ----
+    # critical section: read + write(+unlock) after acquiring the lock
+    hold_s = (1 + write_rtts) * net.rtt_s
+    cas_service = net.cas_onchip_s if feat.onchip else net.cas_pcie_s
+    if feat.hierarchical:
+        # FIFO via the LLT wait queue: one remote CAS per lock cycle; the
+        # queue makes waits deterministic (fairness => tight tail)
+        attempts = (local_rank % (net.handover_max + 1) == 0).astype(
+            np.float64)
+        wait_s = node_rank * hold_s
+        # CAS pressure on the hottest lock: one per handover cycle
+        hot_cas = np.ceil(m / (net.handover_max + 1))
+    else:
+        # spinning: every waiter retries once per hold interval until it
+        # wins => op at rank r burns ~r*hold/rtt CAS (paper §3.2.2);
+        # NO fairness: stragglers wait ~2x their rank (random winner)
+        attempts = 1 + node_rank * (hold_s / net.rtt_s)
+        tail = node_rank >= 0.8 * np.maximum(node_size, 1)
+        wait_s = node_rank * (1.0 + tail) * hold_s
+        hot_cas = m + (hold_s / net.rtt_s) * m * m / 2.0
+    # failed CAS also serialize on the NIC's per-bucket atomic unit; with
+    # host-memory atomics each one occupies ~2 PCIe transactions (§3.2.2)
+    hot_atomic_s = hot_cas * cas_service
+    wait_s = wait_s + np.minimum(node_rank, 1) * hot_atomic_s \
+        * (0.0 if feat.hierarchical else 1.0)
+    cas_msgs = int(attempts.sum())
+
+    # ---- bytes (two-level versions => entry-granular write-back) ----
+    wr_bytes = np.where(split_lane, 2 * node_bytes,
+                        entry_bytes if feat.twolevel else node_bytes)
+    rd_bytes = read_rtts * node_bytes
+    total_bytes = float(wr_bytes.sum() + rd_bytes.sum()) \
+        + cas_msgs * net.small_io_bytes
+    msgs = int(rtts.sum()) + cas_msgs
+
+    # ---- latency & makespan ----
+    latency = rtts * net.rtt_s + wait_s + \
+        np.where(wr_bytes > net.small_io_bytes,
+                 wr_bytes / net.nic_bw_Bps, 0.0)
+    makespan = max(
+        _msg_time(msgs, total_bytes, n_ms, net),   # NIC occupancy
+        m * hold_s,                                # hottest node serializes
+        hot_atomic_s,                              # hottest lock bucket
+        float(np.median(latency)),                 # pipeline floor
+    )
+    return dict(latency_s=latency, makespan_s=makespan,
+                mops=n / makespan / 1e6, rtts=rtts,
+                write_bytes=wr_bytes, cas_msgs=cas_msgs, msgs=msgs,
+                bytes=total_bytes)
+
+
+def price_read_phase(stats: dict, feat: Features, net: NetConfig,
+                     n_ms: int, node_bytes: int):
+    """Price a lookup phase: 1 read RTT on cache hit + version retries."""
+    act = np.asarray(stats["active"], bool)
+    n = int(act.sum())
+    if n == 0:
+        return dict(latency_s=np.zeros(0), makespan_s=0.0, mops=0.0)
+    cache_hit = np.asarray(stats["cache_hit"], bool)[act]
+    retries = np.asarray(stats.get("retries", np.zeros(n)))[act] \
+        if "retries" in stats else np.zeros(n)
+    height = int(stats["height"])
+    rtts = np.where(cache_hit, 1, height) + retries
+    bytes_ = float(rtts.sum()) * node_bytes
+    latency = rtts * net.rtt_s + node_bytes / net.nic_bw_Bps
+    makespan = max(_msg_time(float(rtts.sum()), bytes_, n_ms, net),
+                   float(np.median(latency)))
+    return dict(latency_s=latency, makespan_s=makespan,
+                mops=n / makespan / 1e6, rtts=rtts, bytes=bytes_)
+
+
+class IndexCacheSim:
+    """CS-side index cache (paper §4.2.3): top-two levels always cached;
+    level-1 nodes cached with power-of-two-choices eviction (approximated
+    as LRU over a byte budget)."""
+
+    def __init__(self, capacity_bytes: int, node_bytes: int):
+        self.cap = max(1, capacity_bytes // max(node_bytes, 1))
+        self._lru: dict[int, int] = {}
+        self._tick = 0
+        self.hits = 0
+        self.misses = 0
+
+    def access(self, level1_nodes: np.ndarray) -> np.ndarray:
+        out = np.zeros(level1_nodes.shape[0], bool)
+        for i, nid in enumerate(level1_nodes.tolist()):
+            self._tick += 1
+            if nid in self._lru:
+                self.hits += 1
+                out[i] = True
+            else:
+                self.misses += 1
+                if len(self._lru) >= self.cap:
+                    victim = min(self._lru, key=self._lru.get)
+                    del self._lru[victim]
+            self._lru[nid] = self._tick
+        return out
+
+    @property
+    def hit_ratio(self) -> float:
+        t = self.hits + self.misses
+        return self.hits / t if t else 1.0

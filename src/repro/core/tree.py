@@ -1,0 +1,237 @@
+"""Sherman tree state: a disaggregated node pool as a JAX pytree.
+
+The disaggregated memory pool of the paper (a set of memory servers, each
+exposing registered memory regions) is modelled as a struct-of-arrays node
+pool.  Row ``i`` of every array is one tree node; the owning memory server is
+``i // nodes_per_ms`` (contiguous blocks, so the pool shards cleanly over the
+"mem" mesh axis in :mod:`repro.core.sharded`).
+
+Pointers follow the paper's 64-bit = 16-bit MS id + 48-bit address split —
+here a pointer is simply the global row index (int32), from which the MS id
+is derived.  ``NULL_PTR`` (-1) is the null pointer.
+
+Node layout (paper Fig. 8):
+
+* leaf:      FNV | [FEV, key, value, REV] * fanout | RNV   (entries UNSORTED)
+* internal:  FNV | [key, child] * fanout | RNV             (entries SORTED)
+
+Internal nodes use the *separator* representation: entry ``(k_j, c_j)`` means
+child ``c_j`` covers keys in ``[k_j, k_{j+1})``; the first separator equals
+the node's lower fence.  Every node carries fence keys and its level so that
+readers can detect stale cache entries / freed nodes (paper §4.2.3/§4.2.4).
+
+The global lock table (GLT) — the paper's NIC on-chip lock array — is a small
+``uint16`` array per MS (131072 locks by default, 16-bit thanks to masked
+CAS), kept separate from the node pool.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NULL_PTR = jnp.int32(-1)
+EMPTY_KEY = jnp.int32(-1)          # slot never used / deleted ("null" key)
+KEY_MIN = -(2**31) + 2             # lower fence of leftmost nodes
+KEY_MAX = 2**31 - 1                # upper fence of rightmost nodes
+VERSION_MOD = 16                   # 4-bit versions
+
+
+@dataclasses.dataclass(frozen=True)
+class TreeConfig:
+    """Static configuration of a Sherman tree."""
+
+    n_ms: int = 4                  # number of memory servers (mem shards)
+    nodes_per_ms: int = 4096       # node-pool rows per MS
+    fanout: int = 16               # entries per node (leaf and internal)
+    n_locks_per_ms: int = 131072   # GLT entries per MS (paper: 256KB/16bit)
+    max_height: int = 6            # static traversal bound
+    handover_max: int = 4          # MAX_DEPTH consecutive lock handovers
+    n_cs: int = 4                  # compute servers (data shards)
+    # Modeled wire sizes (bytes) for netsim accounting; defaults follow the
+    # paper's 1KB nodes with 8B keys / 8B values and 4-bit paired versions.
+    key_bytes: int = 8
+    value_bytes: int = 8
+
+    @property
+    def n_nodes(self) -> int:
+        return self.n_ms * self.nodes_per_ms
+
+    @property
+    def park_row(self) -> int:
+        """Reserved row used as the scatter target of masked-out lanes.
+
+        The last row of every MS is reserved (never allocated) so that
+        masked scatters can always be parked on a row that carries no live
+        node, on every mem shard.  ``park_row`` is the global instance."""
+        return self.n_nodes - 1
+
+    @property
+    def alloc_cap(self) -> int:
+        """Allocatable rows per MS (last row reserved for parking)."""
+        return self.nodes_per_ms - 1
+
+    @property
+    def entry_bytes(self) -> int:
+        # key + value + FEV/REV pair (1 byte total) — the paper's 17B.
+        return self.key_bytes + self.value_bytes + 1
+
+    @property
+    def node_bytes(self) -> int:
+        # header: FNV/RNV (1B), fences (2 keys), level+free+sibling (10B)
+        return self.fanout * self.entry_bytes + 2 * self.key_bytes + 11
+
+    def ms_of(self, node_id):
+        return node_id // self.nodes_per_ms
+
+    def lock_index(self, node_id):
+        """Hash a node address into its MS's global lock table (paper l.5)."""
+        return node_id % self.n_locks_per_ms
+
+
+class TreeState(NamedTuple):
+    """The disaggregated tree: one pytree, shardable over the mem axis."""
+
+    keys: jax.Array          # [N, F] int32; EMPTY_KEY = empty slot
+    vals: jax.Array          # [N, F] int32; leaf: value, internal: child ptr
+    fev: jax.Array           # [N, F] uint8 front entry versions (4-bit)
+    rev: jax.Array           # [N, F] uint8 rear  entry versions (4-bit)
+    fnv: jax.Array           # [N]    uint8 front node version
+    rnv: jax.Array           # [N]    uint8 rear  node version
+    level: jax.Array         # [N]    int8  (0 = leaf, -1 = unallocated)
+    fence_lo: jax.Array      # [N]    int32 inclusive lower fence
+    fence_hi: jax.Array      # [N]    int32 exclusive upper fence
+    sibling: jax.Array       # [N]    int32 right sibling (B-link), NULL_PTR
+    free_bit: jax.Array      # [N]    bool  True = node freed (paper §4.2.4)
+    glt: jax.Array           # [n_ms, n_locks] uint16 global lock tables
+    root: jax.Array          # []     int32
+    height: jax.Array        # []     int32 (#levels; 1 = root is a leaf)
+    alloc_next: jax.Array    # [n_ms] int32 per-MS bump pointer
+    alloc_rr: jax.Array      # []     int32 round-robin MS cursor
+
+
+def empty_state(cfg: TreeConfig) -> TreeState:
+    n, f = cfg.n_nodes, cfg.fanout
+    return TreeState(
+        keys=jnp.full((n, f), EMPTY_KEY, jnp.int32),
+        vals=jnp.full((n, f), NULL_PTR, jnp.int32),
+        fev=jnp.zeros((n, f), jnp.uint8),
+        rev=jnp.zeros((n, f), jnp.uint8),
+        fnv=jnp.zeros((n,), jnp.uint8),
+        rnv=jnp.zeros((n,), jnp.uint8),
+        level=jnp.full((n,), -1, jnp.int8),
+        fence_lo=jnp.zeros((n,), jnp.int32),
+        fence_hi=jnp.zeros((n,), jnp.int32),
+        sibling=jnp.full((n,), NULL_PTR, jnp.int32),
+        free_bit=jnp.zeros((n,), bool),
+        glt=jnp.zeros((cfg.n_ms, cfg.n_locks_per_ms), jnp.uint16),
+        root=jnp.int32(0),
+        height=jnp.int32(0),
+        alloc_next=jnp.zeros((cfg.n_ms,), jnp.int32),
+        alloc_rr=jnp.int32(0),
+    )
+
+
+def bulkload(cfg: TreeConfig, keys: np.ndarray, vals: np.ndarray,
+             fill: float = 0.8) -> TreeState:
+    """Build a tree from sorted unique keys, each leaf ``fill`` full.
+
+    Host-side (numpy) setup, mirroring the paper's bulkload of 1B entries 80%
+    full before each benchmark.  Leaves are written *sorted* here — unsortedness
+    only arises from subsequent inserts, which is also true of the paper.
+    """
+    keys = np.asarray(keys, np.int32)
+    vals = np.asarray(vals, np.int32)
+    order = np.argsort(keys, kind="stable")
+    keys, vals = keys[order], vals[order]
+    assert keys.ndim == 1 and keys.shape == vals.shape
+    if keys.size and np.any(keys[1:] == keys[:-1]):
+        raise ValueError("bulkload requires unique keys")
+
+    f = cfg.fanout
+    per_leaf = max(1, min(f, int(round(f * fill))))
+    n, _ = cfg.n_nodes, cfg.fanout
+
+    st = jax.tree_util.tree_map(np.asarray, empty_state(cfg))
+    st = TreeState(*[np.array(x) for x in st])
+
+    next_row = np.zeros(cfg.n_ms, np.int64)
+    rr = [0]
+
+    def alloc() -> int:
+        # two-stage allocator: round-robin MS choice + per-MS bump pointer
+        for _ in range(cfg.n_ms):
+            ms = rr[0] % cfg.n_ms
+            rr[0] += 1
+            if next_row[ms] < cfg.alloc_cap:
+                row = ms * cfg.nodes_per_ms + int(next_row[ms])
+                next_row[ms] += 1
+                return row
+        raise RuntimeError("node pool exhausted during bulkload")
+
+    # ---- build leaf level ----
+    level_nodes: list[int] = []     # node ids of current level, left→right
+    level_keys: list[int] = []      # lower fence of each node
+    if keys.size == 0:
+        nid = alloc()
+        st.level[nid] = 0
+        st.fence_lo[nid], st.fence_hi[nid] = KEY_MIN, KEY_MAX
+        level_nodes, level_keys = [nid], [KEY_MIN]
+    else:
+        starts = list(range(0, keys.size, per_leaf))
+        for j, s in enumerate(starts):
+            chunk = slice(s, min(s + per_leaf, keys.size))
+            nid = alloc()
+            cnt = keys[chunk].size
+            st.keys[nid, :cnt] = keys[chunk]
+            st.vals[nid, :cnt] = vals[chunk]
+            st.level[nid] = 0
+            st.fence_lo[nid] = KEY_MIN if j == 0 else int(keys[s])
+            st.fence_hi[nid] = (KEY_MAX if j == len(starts) - 1
+                                else int(keys[starts[j + 1]]))
+            if level_nodes:
+                st.sibling[level_nodes[-1]] = nid
+            level_nodes.append(nid)
+            level_keys.append(int(st.fence_lo[nid]))
+
+    # ---- build internal levels bottom-up ----
+    lvl = 0
+    while len(level_nodes) > 1:
+        lvl += 1
+        parents, parent_keys = [], []
+        for s in range(0, len(level_nodes), f):
+            group = level_nodes[s:s + f]
+            gkeys = level_keys[s:s + f]
+            nid = alloc()
+            st.keys[nid, :len(group)] = gkeys
+            st.vals[nid, :len(group)] = group
+            st.level[nid] = lvl
+            st.fence_lo[nid] = gkeys[0] if s else KEY_MIN
+            parents.append(nid)
+            parent_keys.append(KEY_MIN if s == 0 else gkeys[0])
+        for j, nid in enumerate(parents):
+            st.fence_hi[nid] = (KEY_MAX if j == len(parents) - 1
+                                else parent_keys[j + 1])
+            if j + 1 < len(parents):
+                st.sibling[nid] = parents[j + 1]
+        # first separator of each internal node must equal its lower fence
+        for nid in parents:
+            st.keys[nid, 0] = st.fence_lo[nid]
+        level_nodes, level_keys = parents, parent_keys
+
+    root = level_nodes[0]
+    out = TreeState(
+        keys=jnp.asarray(st.keys), vals=jnp.asarray(st.vals),
+        fev=jnp.asarray(st.fev), rev=jnp.asarray(st.rev),
+        fnv=jnp.asarray(st.fnv), rnv=jnp.asarray(st.rnv),
+        level=jnp.asarray(st.level),
+        fence_lo=jnp.asarray(st.fence_lo), fence_hi=jnp.asarray(st.fence_hi),
+        sibling=jnp.asarray(st.sibling), free_bit=jnp.asarray(st.free_bit),
+        glt=jnp.asarray(st.glt),
+        root=jnp.int32(root), height=jnp.int32(lvl + 1),
+        alloc_next=jnp.asarray(next_row, jnp.int32), alloc_rr=jnp.int32(rr[0]),
+    )
+    return out

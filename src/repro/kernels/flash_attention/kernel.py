@@ -1,0 +1,110 @@
+"""Pallas TPU flash attention (causal, GQA), online-softmax streaming.
+
+Grid: (batch, q_heads, q_blocks, kv_blocks) — the kv axis is innermost, so
+each (b, h, iq) revisits its accumulator scratch across kv steps (TPU grids
+execute sequentially over the trailing axis).  Blocks are VMEM-resident:
+
+  q:   [1, 1, BQ, hd]   index (b, h, iq, 0)
+  k/v: [1, 1, BK, hd]   index (b, h // group, ik, 0)   (GQA: shared KV head)
+  o:   [1, 1, BQ, hd]   written at the last kv step
+
+Scratch: acc [BQ, hd] f32, m/l [BQ, 128] f32 (lane-padded running max/sum).
+Causal blocks strictly above the diagonal are masked via pl.when; MXU dims
+(BQ, BK, hd) should be multiples of 128 for full utilization.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc, m_s, l_s, *,
+                  bq: int, bk: int, causal: bool, scale: float):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+
+    run = True
+    if causal:
+        # skip blocks strictly above the causal diagonal
+        run = (ik * bk) <= (iq * bq + bq - 1)
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32) * scale       # [BQ, hd]
+        k = k_ref[0, 0].astype(jnp.float32)               # [BK, hd]
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if causal:
+            qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32,
+                                                      (bq, bk), 0)
+            kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32,
+                                                      (bq, bk), 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_prev = m_s[:, 0]                                 # [BQ]
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[:, None])
+        l_cur = alpha * l_s[:, 0] + jnp.sum(p, axis=1)
+        acc[...] = acc[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_s[...] = jnp.broadcast_to(m_cur[:, None], m_s.shape)
+        l_s[...] = jnp.broadcast_to(l_cur[:, None], l_s.shape)
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        denom = jnp.maximum(l_s[:, 0], 1e-30)[:, None]
+        o_ref[0, 0] = (acc[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, bq: int = 128, bk: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """q: [B, H, Sq, hd]; k, v: [B, KV, Sk, hd] -> [B, H, Sq, hd]."""
+    b, h, sq, hd = q.shape
+    _, kvh, sk, _ = k.shape
+    assert h % kvh == 0, "q heads must be a multiple of kv heads"
+    group = h // kvh
+    bq = min(bq, sq)
+    bk = min(bk, sk)
+    assert sq % bq == 0 and sk % bk == 0
+    grid = (b, h, sq // bq, sk // bk)
+    scale = hd ** -0.5
+
+    kernel = functools.partial(_flash_kernel, bq=bq, bk=bk, causal=causal,
+                               scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b_, h_, iq, ik:
+                         (b_, h_, iq, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b_, h_, iq, ik:
+                         (b_, h_ // group, ik, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b_, h_, iq, ik:
+                         (b_, h_ // group, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd), lambda b_, h_, iq, ik:
+                               (b_, h_, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, hd), jnp.float32),
+            pltpu.VMEM((bq, 128), jnp.float32),
+            pltpu.VMEM((bq, 128), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

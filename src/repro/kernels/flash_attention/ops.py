@@ -1,0 +1,20 @@
+"""jit'd public wrapper: [B,S,H,hd] model layout <-> kernel layout."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "interpret"))
+def flash_sdpa(q: jax.Array, k: jax.Array, v: jax.Array, *,
+               causal: bool = True, interpret: bool = False) -> jax.Array:
+    """q: [B,S,H,hd]; k,v: [B,S,KV,hd] (model layout) -> [B,S,H,hd]."""
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    o = flash_attention(qt, kt, vt, causal=causal, interpret=interpret)
+    return jnp.swapaxes(o, 1, 2)

@@ -1,0 +1,81 @@
+"""Pallas TPU kernel for Sherman's hot read path: batched unsorted-leaf
+search with the two-level version check (paper Fig. 9).
+
+The paper's unsorted leaves force a full-node scan per lookup; on the memory
+server this is the NIC's job, on TPU it is a VPU sweep over the leaf image
+held in VMEM.  A batch of fetched leaf images is tiled [BT, F] so each grid
+step compares BT query keys against all F slots simultaneously — the SIMD
+analogue of Sherman's "traverse the entire targeted leaf node", with the
+version words (FEV/REV/FNV/RNV — the on-chip-memory resident metadata)
+validated in the same pass.
+
+Inputs are the *gathered* leaf rows (HBM -> VMEM by BlockSpec); outputs are
+value / found / consistent per lane.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _leaf_kernel(qk_ref, keys_ref, vals_ref, fev_ref, rev_ref,
+                 fnv_ref, rnv_ref, free_ref,
+                 val_ref, found_ref, cons_ref, *, empty_key: int):
+    qk = qk_ref[...]                         # [BT]
+    keys = keys_ref[...]                     # [BT, F]
+    vals = vals_ref[...]
+    eq = keys == qk[:, None]
+    found = jnp.any(eq, axis=1)
+    # first-match one-hot select (unsorted full scan; keys unique per leaf,
+    # first-match keeps the kernel deterministic regardless)
+    first = eq & (jnp.cumsum(eq.astype(jnp.int32), axis=1) == 1)
+    sel = lambda a: jnp.sum(jnp.where(first, a, 0), axis=1)
+    value = sel(vals)
+    fev = sel(fev_ref[...].astype(jnp.int32))
+    rev = sel(rev_ref[...].astype(jnp.int32))
+    node_ok = (fnv_ref[...] == rnv_ref[...]) & (free_ref[...] == 0)
+    entry_ok = fev == rev
+    consistent = node_ok & (entry_ok | ~found)
+    val_ref[...] = jnp.where(found & consistent, value,
+                             jnp.int32(-1))
+    found_ref[...] = (found & consistent).astype(jnp.int32)
+    cons_ref[...] = consistent.astype(jnp.int32)
+
+
+def leaf_search(qkeys: jax.Array, keys: jax.Array, vals: jax.Array,
+                fev: jax.Array, rev: jax.Array, fnv: jax.Array,
+                rnv: jax.Array, free: jax.Array, *,
+                bt: int = 256, empty_key: int = -1,
+                interpret: bool = False):
+    """qkeys [B]; keys/vals/fev/rev [B, F]; fnv/rnv/free [B].
+
+    Returns (value [B], found [B] bool, consistent [B] bool).
+    """
+    b, f = keys.shape
+    bt = min(bt, b)
+    assert b % bt == 0
+    grid = (b // bt,)
+    row = lambda i: (i, 0)
+    vec = lambda i: (i,)
+    kernel = functools.partial(_leaf_kernel, empty_key=empty_key)
+    value, found, cons = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt,), vec),
+            pl.BlockSpec((bt, f), row),
+            pl.BlockSpec((bt, f), row),
+            pl.BlockSpec((bt, f), row),
+            pl.BlockSpec((bt, f), row),
+            pl.BlockSpec((bt,), vec),
+            pl.BlockSpec((bt,), vec),
+            pl.BlockSpec((bt,), vec),
+        ],
+        out_specs=[pl.BlockSpec((bt,), vec)] * 3,
+        out_shape=[jax.ShapeDtypeStruct((b,), jnp.int32)] * 3,
+        interpret=interpret,
+    )(qkeys, keys, vals, fev, rev, fnv, rnv, free)
+    return value, found.astype(bool), cons.astype(bool)

@@ -1,0 +1,27 @@
+"""jit'd wrapper: gather leaf rows from the pool and search them.
+
+On TPU the gather stages HBM rows into VMEM via the BlockSpec pipeline; on
+CPU tests the kernel runs under interpret=True against the ref oracle.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tree import TreeConfig, TreeState
+from repro.kernels.leaf_search.kernel import leaf_search
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "interpret"))
+def lookup_leaves(cfg: TreeConfig, st: TreeState, leaf: jax.Array,
+                  qkeys: jax.Array, interpret: bool = True):
+    """Kernel-backed equivalent of core.ops.leaf_lookup."""
+    return leaf_search(
+        qkeys,
+        st.keys[leaf], st.vals[leaf],
+        st.fev[leaf], st.rev[leaf],
+        st.fnv[leaf].astype(jnp.int32), st.rnv[leaf].astype(jnp.int32),
+        st.free_bit[leaf].astype(jnp.int32),
+        bt=min(256, qkeys.shape[0]), interpret=interpret)

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the leaf-search kernel (mirrors core.ops)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def leaf_search_ref(qkeys, keys, vals, fev, rev, fnv, rnv, free):
+    eq = keys == qkeys[:, None]
+    found = jnp.any(eq, axis=1)
+    slot = jnp.argmax(eq, axis=1)
+    take = lambda a: jnp.take_along_axis(a, slot[:, None], axis=1)[:, 0]
+    node_ok = (fnv == rnv) & (free == 0)
+    entry_ok = take(fev.astype(jnp.int32)) == take(rev.astype(jnp.int32))
+    consistent = node_ok & (entry_ok | ~found)
+    value = jnp.where(found & consistent, take(vals), jnp.int32(-1))
+    return value, found & consistent, consistent

@@ -1,0 +1,65 @@
+"""Pallas TPU kernel for the WKV6 recurrence (RWKV6 time mixing).
+
+Per (batch, head): S_t = diag(w_t) S_{t-1} + k_t^T v_t,
+                   o_t = r_t (S_{t-1} + diag(u) k_t^T v_t).
+
+Grid: (B, H, T/BT) — the time axis is innermost so the [N, N] state scratch
+carries across time blocks in VMEM (the same revisiting pattern as the flash
+kernel).  Each grid step streams a [BT, N] block of r/k/v/w through the VPU
+and steps the recurrence BT times with a fori_loop; N = 64 keeps the state
+(64×64×4 B = 16 KB) comfortably VMEM-resident — this is the TPU analogue of
+keeping the hot lock/state table on-chip (paper §4.3).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, s_scr, *,
+                bt: int, n: int):
+    it = pl.program_id(2)
+
+    @pl.when(it == 0)
+    def _init():
+        s_scr[...] = jnp.zeros_like(s_scr)
+
+    u = u_ref[0, 0].astype(jnp.float32)            # [N]
+
+    def step(t, s):
+        r = r_ref[0, 0, t].astype(jnp.float32)     # [N]
+        k = k_ref[0, 0, t].astype(jnp.float32)
+        v = v_ref[0, 0, t].astype(jnp.float32)
+        w = w_ref[0, 0, t].astype(jnp.float32)
+        kv = k[:, None] * v[None, :]               # [N, N]
+        out = jnp.sum((s + u[:, None] * kv) * r[:, None], axis=0)
+        o_ref[0, 0, t] = out.astype(o_ref.dtype)
+        return w[:, None] * s + kv
+
+    s_scr[...] = jax.lax.fori_loop(0, bt, step, s_scr[...])
+
+
+def wkv6(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+         u: jax.Array, *, bt: int = 128, interpret: bool = False
+         ) -> jax.Array:
+    """r/k/v/w: [B, H, T, N]; u: [H, N] -> o [B, H, T, N]."""
+    b, h, t, n = r.shape
+    bt = min(bt, t)
+    assert t % bt == 0
+    grid = (b, h, t // bt)
+    blk = pl.BlockSpec((1, 1, bt, n), lambda b_, h_, it: (b_, h_, it, 0))
+    ublk = pl.BlockSpec((1, 1, n), lambda b_, h_, it: (0, h_, 0))
+    kernel = functools.partial(_wkv_kernel, bt=bt, n=n)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[blk, blk, blk, blk, ublk],
+        out_specs=blk,
+        out_shape=jax.ShapeDtypeStruct((b, h, t, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((n, n), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u[None])

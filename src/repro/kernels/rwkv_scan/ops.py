@@ -1,0 +1,13 @@
+"""jit'd wrapper for the WKV6 kernel (drop-in for the model's time scan)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.rwkv_scan.kernel import wkv6
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def wkv6_apply(r, k, v, w, u, interpret: bool = True):
+    return wkv6(r, k, v, w, u, interpret=interpret)

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the WKV6 recurrence (lax.scan over time)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(r, k, v, w, u):
+    """r/k/v/w: [B, H, T, N]; u: [H, N] -> o [B, H, T, N] (fp32)."""
+    b, h, t, n = r.shape
+    r32, k32, v32, w32 = (x.astype(jnp.float32) for x in (r, k, v, w))
+    u32 = u.astype(jnp.float32)
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp                       # [B, H, N]
+        kv = kt[..., :, None] * vt[..., None, :]   # [B, H, N, N]
+        out = jnp.sum((s + u32[None, :, :, None] * kv)
+                      * rt[..., :, None], axis=-2)
+        return wt[..., :, None] * s + kv, out
+
+    xs = tuple(jnp.moveaxis(x, 2, 0) for x in (r32, k32, v32, w32))
+    s0 = jnp.zeros((b, h, n, n), jnp.float32)
+    _, out = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(out, 0, 2)

@@ -1,0 +1,350 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST precede any other import (jax locks the device
+count on first init): the dry-run — and only the dry-run — sees 512
+placeholder CPU devices so the production meshes can be built.
+
+Per cell the driver does TWO things:
+
+1. **Real compile** (scan-over-layers, the production program): proves the
+   sharding lowers + compiles on the target mesh and records
+   ``memory_analysis()`` for the true layer count.
+
+2. **Cost probes**: XLA's ``cost_analysis`` counts while-loop bodies ONCE,
+   so a scanned 95-layer model would report ~1/95th of its FLOPs.  We
+   therefore lower small *unrolled* probes (1 and 2 layer-units) and
+   extrapolate linearly — exact for homogeneous stacks: cost(L) = a + b*L.
+   RWKV's time-axis while loop gets one extra probe at S/2 (see
+   ``_rwkv_corrected``).  Collective bytes follow the same algebra.
+
+Programs per shape: train_4k -> sharded train_step (fwd+bwd+AdamW);
+prefill_32k -> api.prefill; decode_* -> api.decode_step (1 token vs
+seq-len state).  Results go to one JSON per cell (incremental cache).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+      --mesh both --out experiments/dryrun [--attn chunked] [--force]
+"""
+import argparse          # noqa: E402
+import dataclasses       # noqa: E402
+import json              # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+
+import jax               # noqa: E402
+import numpy as np       # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P   # noqa: E402
+
+from repro import configs as cfglib                    # noqa: E402
+from repro.launch import shapes as shp                 # noqa: E402
+from repro.launch.mesh import make_production_mesh     # noqa: E402
+from repro.launch.train import make_train_step         # noqa: E402
+from repro.models.registry import build                # noqa: E402
+from repro.optim import adamw                          # noqa: E402
+from repro.parallel import sharding as sh              # noqa: E402
+from repro.roofline import analyze                     # noqa: E402
+
+
+def _ns(mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda p: NamedSharding(mesh, p), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def count_params(params_spec, cfg) -> tuple[float, float]:
+    """(total, active) parameter counts from the spec tree."""
+    total = sum(float(np.prod(l.shape))
+                for l in jax.tree_util.tree_leaves(params_spec))
+    active = total
+    if cfg.is_moe:
+        names = jax.tree_util.tree_leaves(sh.name_tree(params_spec))
+        leaves = jax.tree_util.tree_leaves(params_spec)
+        expert = sum(float(np.prod(l.shape))
+                     for n, l in zip(names, leaves)
+                     if ".moe.w_" in n)
+        active = total - expert * (1 - cfg.top_k / cfg.n_experts)
+    return total, active
+
+
+def probe_cfg(cfg, k: int):
+    """Config with k layer-units, unrolled (see module docstring).
+
+    Returns (cfg_k, units_real): linear extrapolation target is
+    cost(units_real) from probes at units k=1,2.
+    """
+    if cfg.family == "hybrid":
+        # unit = (rec, rec, attn) super-block; tail rec layers ≈ 1/3 super
+        from repro.models import rglru
+        units_real = rglru.n_super(cfg) + rglru.n_tail(cfg) / 3.0
+        return dataclasses.replace(cfg, n_layers=3 * k,
+                                   unroll_layers=True), units_real
+    if cfg.family == "audio":
+        # unit = one encoder + one decoder layer (24/24 in whisper-medium)
+        units_real = cfg.n_layers
+        return dataclasses.replace(cfg, n_layers=k, n_enc_layers=k,
+                                   unroll_layers=True), units_real
+    return dataclasses.replace(cfg, n_layers=k,
+                               unroll_layers=True), cfg.n_layers
+
+
+def _lower_program(cfg, shape, multi_pod, opt_cfg):
+    """Build + lower the cell's program for a given config variant."""
+    api = build(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    params_spec = shp.params_specs(api)
+    p_pspec = sh.params_pspecs(params_spec, mesh)
+
+    if shape.kind == "train":
+        batch_spec = shp.batch_specs(cfg, shape)
+        opt_spec = jax.eval_shape(adamw.init, params_spec)
+        o_pspec = adamw.AdamWState(step=P(), m=p_pspec, v=p_pspec)
+        b_pspec = sh.batch_pspecs(batch_spec, mesh)
+        step = make_train_step(api, opt_cfg or adamw.AdamWConfig())
+        jitted = jax.jit(
+            step,
+            in_shardings=(_ns(mesh, p_pspec), _ns(mesh, o_pspec),
+                          _ns(mesh, b_pspec)),
+            out_shardings=(_ns(mesh, p_pspec), _ns(mesh, o_pspec), None),
+            donate_argnums=(0, 1))
+        with mesh:
+            return jitted.lower(params_spec, opt_spec, batch_spec), \
+                params_spec, mesh
+    if shape.kind == "prefill":
+        batch_spec = shp.batch_specs(cfg, shape)
+        b_pspec = sh.batch_pspecs(batch_spec, mesh)
+        if api.prefill is not None:
+            def prefill_fn(params, batch):
+                return api.prefill(params, batch, shape.seq)
+        else:                      # recurrent: prefill == full forward
+            def prefill_fn(params, batch):
+                return api.loss(params, batch)
+        jitted = jax.jit(prefill_fn,
+                         in_shardings=(_ns(mesh, p_pspec),
+                                       _ns(mesh, b_pspec)))
+        with mesh:
+            return jitted.lower(params_spec, batch_spec), params_spec, mesh
+    # decode
+    state_spec = shp.decode_state_specs(api, params_spec, shape)
+    s_pspec = sh.decode_state_pspecs(state_spec, mesh)
+    tok_spec = shp.token_spec(shape)
+    dsize = int(np.prod([mesh.shape[a] for a in sh.dp_axes(mesh)]))
+    t_pspec = (P(sh.dp_axes(mesh)) if shape.batch % dsize == 0
+               and shape.batch >= dsize else P())
+    jitted = jax.jit(
+        api.decode_step,
+        in_shardings=(_ns(mesh, p_pspec), _ns(mesh, s_pspec),
+                      NamedSharding(mesh, t_pspec)),
+        out_shardings=(None, _ns(mesh, s_pspec)),
+        donate_argnums=(1,))
+    with mesh:
+        return jitted.lower(params_spec, state_spec, tok_spec), \
+            params_spec, mesh
+
+
+def _probe_costs(cfg, shape, multi_pod, opt_cfg, attn):
+    """Unrolled 1/2-unit probes -> exact per-unit HLO costs."""
+    out = {}
+    for k in (1, 2):
+        cfg_k, units_real = probe_cfg(
+            dataclasses.replace(cfg, attn_impl=attn), k)
+        lowered, _, _ = _lower_program(cfg_k, shape, multi_pod, opt_cfg)
+        compiled = lowered.compile()
+        info = analyze.analyze_compiled(compiled)
+        out[k] = info
+    b = {m: out[2][m] - out[1][m]
+         for m in ("flops", "bytes_accessed")}
+    b["coll"] = out[2]["collectives"]["total"] \
+        - out[1]["collectives"]["total"]
+    a = {m: out[1][m] - b[m] for m in ("flops", "bytes_accessed")}
+    a["coll"] = out[1]["collectives"]["total"] - b["coll"]
+
+    def extrap(units):
+        return {m: max(a[m] + b[m] * units, 0.0)
+                for m in ("flops", "bytes_accessed", "coll")}
+
+    _, units_real = probe_cfg(cfg, 1)
+    est = extrap(units_real)
+    est["units_real"] = units_real
+    est["per_unit"] = b
+    est["fixed"] = a
+    return est
+
+
+def _rwkv_time_corrected(cfg, shape, multi_pod, opt_cfg, attn, est):
+    """RWKV train/prefill: the WKV recurrence is the only remaining while
+    loop after the layer-major restructure, and its body is *structurally
+    known* — a weight-free elementwise state update with NO collectives
+    (state and streams are head-sharded; every op is shard-local).  We
+    therefore add the analytic per-token body on top of the layer-probe
+    extrapolation (which counted the loop body once — a <0.1% overlap):
+
+      per token/layer:  flops ≈ 5·B·H·N²  (kv outer + out + decay-update,
+                        fwd; ×3 for bwd recompute+grads)
+      bytes ≈ state r/w (2·B·H·N²·4 B, ÷chunk when chunked) + rkvw slices
+      collectives: 0  (so the probe-extrapolated value stands)
+    """
+    mesh_div = 16   # model-axis shards of the H dim
+    b_dev = shape.batch // 16 if shape.batch >= 16 else shape.batch
+    h = cfg.d_model // cfg.rwkv_head_dim
+    h_dev = max(h // mesh_div, 1)
+    n = cfg.rwkv_head_dim
+    layers = cfg.n_layers
+    mult = 3.0 if shape.kind == "train" else 1.0   # bwd recompute+grad
+    body_flops = 5.0 * b_dev * h_dev * n * n * mult
+    chunk = max(cfg.rwkv_chunk, 1)
+    state_rw = 2.0 * b_dev * h_dev * n * n * 4.0 / chunk
+    stream = 5.0 * b_dev * h_dev * n * 4.0
+    body_bytes = (state_rw + stream) * mult
+    s = shape.seq
+    return dict(
+        flops=est["flops"] + s * layers * body_flops,
+        bytes_accessed=est["bytes_accessed"] + s * layers * body_bytes,
+        coll=est["coll"],
+    )
+
+
+def pad_heads_cfg(cfg):
+    """Deployment padding: q-heads up to a multiple of 16 (and kv heads up
+    to a divisor of that) so attention shards over the model axis instead
+    of being replicated.  head_dim is pinned so only the head count grows
+    (a deployment superset of the assigned config — EXPERIMENTS §Perf)."""
+    if cfg.n_heads == 0 or cfg.n_heads % 16 == 0:
+        return cfg
+    h = -(-cfg.n_heads // 16) * 16
+    kv = max(cfg.n_kv_heads, 1)
+    while h % kv:
+        kv += 1
+    return dataclasses.replace(cfg, n_heads=h, n_kv_heads=kv,
+                               head_dim=cfg.hd)
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               opt_cfg=None, attn: str = "naive",
+               moe_pad: bool = False, rwkv_chunk: int = 0,
+               pad_heads: bool = False) -> dict:
+    cfg = cfglib.get(arch)
+    cfg = dataclasses.replace(cfg, attn_impl=attn, moe_pad_experts=moe_pad,
+                              rwkv_chunk=rwkv_chunk)
+    if pad_heads:
+        cfg = pad_heads_cfg(cfg)
+    shape = shp.SHAPES[shape_name]
+    ok, why = shp.cell_supported(cfg, shape)
+    if not ok:
+        return dict(status="skipped", reason=why)
+
+    # ---- 1. real compile (scan form, true layer count) ----
+    t0 = time.time()
+    lowered, params_spec, mesh = _lower_program(cfg, shape, multi_pod,
+                                                opt_cfg)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    print(compiled.memory_analysis())
+    print({k: v for k, v in (compiled.cost_analysis() or {}).items()
+           if k in ("flops", "bytes accessed")})
+    real = analyze.analyze_compiled(compiled)
+
+    # ---- 2. unrolled cost probes (exact per-layer accounting) ----
+    est = _probe_costs(cfg, shape, multi_pod, opt_cfg, attn)
+    if cfg.family == "ssm" and shape.kind in ("train", "prefill"):
+        corrected = _rwkv_time_corrected(cfg, shape, multi_pod, opt_cfg,
+                                         attn, est)
+        est.update(corrected)
+        est["time_loop_corrected"] = True
+
+    flops = est["flops"]
+    bytes_accessed = est["bytes_accessed"]
+    coll = est["coll"]
+    rl = analyze.roofline(flops, bytes_accessed, coll)
+
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    n_total, n_active = count_params(params_spec, cfg)
+    training = shape.kind == "train"
+    tokens = shape.batch * (shape.seq if shape.kind != "decode" else 1)
+    mf = analyze.model_flops(n_active, tokens, training)
+    hlo_global = flops * n_chips
+    return dict(
+        status="ok", arch=arch, shape=shape_name,
+        mesh="multi" if multi_pod else "single", n_chips=n_chips,
+        params_total=n_total, params_active=n_active,
+        tokens=tokens, model_flops=mf, attn=attn,
+        flops=flops, bytes_accessed=bytes_accessed,
+        collective_bytes=coll, roofline=rl,
+        useful_ratio=mf / hlo_global if hlo_global else 0.0,
+        scan_compile=dict(
+            lower_s=t_lower, compile_s=t_compile,
+            memory=real["memory"],
+            raw_flops_scan_counted_once=real["flops"],
+            collectives_per_kind=real["collectives"]["per_kind"],
+            collective_counts=real["collectives"]["counts"]),
+        probes=dict(per_unit=est["per_unit"], fixed=est["fixed"],
+                    units_real=est["units_real"],
+                    time_loop_corrected=est.get("time_loop_corrected",
+                                                False)),
+    )
+
+
+ARCH_NAMES = [a.replace("_", "-") for a in cfglib.ALL_ARCHS]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--attn", default="naive", choices=["naive", "chunked"])
+    ap.add_argument("--moe-pad", action="store_true")
+    ap.add_argument("--rwkv-chunk", type=int, default=0)
+    ap.add_argument("--pad-heads", action="store_true")
+    args = ap.parse_args(argv)
+
+    archs = ARCH_NAMES if args.arch == "all" else [args.arch]
+    shapes = list(shp.SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    os.makedirs(args.out, exist_ok=True)
+
+    failures = 0
+    for arch in archs:
+        for shape_name in shapes:
+            for multi in meshes:
+                tag = f"{cfglib.canon(arch)}__{shape_name}__" \
+                      f"{'multi' if multi else 'single'}"
+                path = os.path.join(args.out, tag + ".json")
+                if os.path.exists(path) and not args.force:
+                    print(f"[dryrun] cached {tag}")
+                    continue
+                print(f"[dryrun] {tag} ...", flush=True)
+                try:
+                    info = lower_cell(arch, shape_name, multi,
+                                      attn=args.attn,
+                                      moe_pad=args.moe_pad,
+                                      rwkv_chunk=args.rwkv_chunk,
+                                      pad_heads=args.pad_heads)
+                except Exception as e:
+                    info = dict(status="error", error=str(e),
+                                traceback=traceback.format_exc())
+                    failures += 1
+                    print(f"[dryrun] FAILED {tag}: {e}")
+                with open(path, "w") as f:
+                    json.dump(info, f, indent=2, default=str)
+                if info.get("status") == "ok":
+                    rl = info["roofline"]
+                    print(f"[dryrun] {tag}: dominant={rl['dominant']} "
+                          f"bound={rl['bound_s'] * 1e3:.2f}ms "
+                          f"compile={info['scan_compile']['compile_s']:.0f}s",
+                          flush=True)
+    if failures:
+        raise SystemExit(f"{failures} cells failed")
+    print("[dryrun] all requested cells done")
+
+
+if __name__ == "__main__":
+    main()

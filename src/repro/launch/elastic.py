@@ -1,0 +1,58 @@
+"""Elastic scaling: re-mesh and re-shard live state after device-set
+changes (node failure / scale-up).
+
+On a real fleet the controller detects a missing host, reforms the mesh
+from surviving devices, and every jitted step recompiles against the new
+mesh; parameters/optimizer state are re-sharded with ``jax.device_put``
+(resumable from the checkpoint manager if hosts were lost).  This module is
+the mesh-math + resharding piece, exercised in tests with virtual devices.
+"""
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from repro.parallel import sharding as sh
+
+
+def reform_mesh(devices: Sequence, data: int | None = None,
+                model: int | None = None) -> Mesh:
+    """Largest (data, model) mesh that fits the surviving devices.
+
+    Keeps the model axis as large as possible (TP degree is tied to weight
+    shard shapes), shrinking the data axis first — the standard elastic-DP
+    policy."""
+    n = len(devices)
+    if model is None:
+        model = n
+        while model > 1 and n % model:
+            model -= 1
+    data = data or n // model
+    if data * model > n:
+        raise ValueError(f"{data}x{model} mesh needs {data * model} "
+                         f"devices, have {n}")
+    dev = np.asarray(devices[: data * model]).reshape(data, model)
+    return Mesh(dev, ("data", "model"))
+
+
+def reshard_params(params: Any, new_mesh: Mesh) -> Any:
+    """Move a parameter pytree onto a new mesh (same logical specs)."""
+    shardings = jax.tree_util.tree_map(
+        lambda s: NamedSharding(new_mesh, s),
+        sh.params_pspecs(params, new_mesh),
+        is_leaf=lambda x: isinstance(x, PartitionSpec))
+    return jax.device_put(params, shardings)
+
+
+def drop_devices(mesh: Mesh, n_failed: int) -> Mesh:
+    """Simulate losing ``n_failed`` devices: reform from the survivors."""
+    flat = list(np.asarray(mesh.devices).reshape(-1))
+    survivors = flat[:-n_failed] if n_failed else flat
+    model = mesh.shape.get("model", 1)
+    while model > 1 and len(survivors) % model:
+        survivors = survivors[:-1]
+    data = len(survivors) // model
+    return reform_mesh(survivors, data=data, model=model)

@@ -1,0 +1,34 @@
+"""Production mesh construction.
+
+A pod is a (data=16, model=16) = 256-chip TPU v5e slice; the multi-pod mesh
+adds a leading ``pod`` axis (2 pods = 512 chips for the dry-run; the axis
+generalizes to N pods).  Defined as functions so importing this module never
+touches jax device state (the dry-run must set XLA_FLAGS first).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """A small mesh over whatever devices exist (tests / examples)."""
+    n = len(jax.devices())
+    data = min(data, n)
+    model = min(model, max(1, n // data))
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+# TPU v5e hardware constants (roofline denominators)
+PEAK_FLOPS_BF16 = 197e12        # per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW = 50e9                   # bytes/s per link (~per chip per direction)

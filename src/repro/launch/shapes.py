@@ -1,0 +1,75 @@
+"""Assigned input-shape cells and their ShapeDtypeStruct stand-ins.
+
+Every LM-family arch pairs with four shapes; ``decode_*`` / ``long_*`` lower
+``serve_step`` (one token against a seq_len KV cache / recurrent state), not
+``train_step``.  ``long_500k`` requires sub-quadratic attention and is
+skipped (with a reason) for pure full-attention archs — see DESIGN.md §6.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ArchConfig
+from repro.models.registry import ModelAPI
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str          # "train" | "prefill" | "decode"
+    seq: int
+    batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524_288, 1),
+}
+
+
+def cell_supported(cfg: ArchConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return False, ("full O(L^2) attention at 524288 tokens — "
+                       "sub-quadratic archs only (DESIGN.md §6)")
+    return True, ""
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeSpec) -> dict:
+    """ShapeDtypeStruct stand-ins for the data batch (no allocation)."""
+    out = {"tokens": jax.ShapeDtypeStruct((shape.batch, shape.seq),
+                                          jnp.int32)}
+    if cfg.family == "audio":
+        out["frames"] = jax.ShapeDtypeStruct(
+            (shape.batch, cfg.n_frames, cfg.d_model), jnp.float32)
+    if cfg.family == "vlm":
+        out["patches"] = jax.ShapeDtypeStruct(
+            (shape.batch, cfg.n_patches, cfg.d_model), jnp.float32)
+    return out
+
+
+def params_specs(api: ModelAPI) -> object:
+    """Parameter ShapeDtypeStructs via eval_shape (no allocation)."""
+    rng = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    return jax.eval_shape(api.init, rng)
+
+
+def decode_state_specs(api: ModelAPI, params_spec, shape: ShapeSpec):
+    """Decode-state ShapeDtypeStructs via eval_shape (no allocation)."""
+    tok = {"tokens": jax.ShapeDtypeStruct((shape.batch, 1), jnp.int32)}
+    if api.cfg.family == "audio":
+        tok["frames"] = jax.ShapeDtypeStruct(
+            (shape.batch, api.cfg.n_frames, api.cfg.d_model), jnp.float32)
+    if api.cfg.family == "vlm":
+        tok["patches"] = jax.ShapeDtypeStruct(
+            (shape.batch, api.cfg.n_patches, api.cfg.d_model), jnp.float32)
+    return jax.eval_shape(
+        lambda p, b: api.decode_init(p, b, shape.seq), params_spec, tok)
+
+
+def token_spec(shape: ShapeSpec) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct((shape.batch,), jnp.int32)

@@ -1,0 +1,165 @@
+"""Training launcher: sharded train_step builder + fault-tolerant loop.
+
+``make_train_step`` builds the jitted (params, opt, batch) -> (params, opt,
+metrics) step with the sharding rules from :mod:`repro.parallel.sharding`;
+``run`` drives it with checkpoint/restore, auto-resume, a straggler
+watchdog, and optional gradient compression.
+
+Usage (example end-to-end driver, ~100M model):
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-135m \
+        --steps 300 --batch 8 --seq 256 --reduced
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs as cfglib
+from repro.checkpoint.manager import CheckpointManager
+from repro.data.tokens import synthetic_batches
+from repro.launch.mesh import make_host_mesh
+from repro.models.registry import ModelAPI, build
+from repro.optim import adamw
+from repro.optim.compression import compress_grads
+from repro.parallel import sharding as sh
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 100
+    log_every: int = 10
+    ckpt_every: int = 50
+    ckpt_dir: str = "checkpoints"
+    keep: int = 3
+    grad_compression: str = "none"   # none | int8
+    straggler_factor: float = 3.0    # step-time watchdog threshold
+    opt: adamw.AdamWConfig = dataclasses.field(
+        default_factory=adamw.AdamWConfig)
+
+
+def make_train_step(api: ModelAPI, opt_cfg: adamw.AdamWConfig,
+                    compression: str = "none") -> Callable:
+    def step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(api.loss)(params, batch)
+        if compression != "none":
+            grads = compress_grads(grads, compression)
+        params, opt_state, info = adamw.update(opt_cfg, grads, opt_state,
+                                               params)
+        metrics = dict(loss=loss, grad_norm=info["grad_norm"],
+                       lr=info["lr"])
+        return params, opt_state, metrics
+
+    return step
+
+
+def shard_train_fns(api: ModelAPI, mesh, params, opt_state, batch,
+                    opt_cfg, compression="none"):
+    """jit the step with explicit in/out shardings + donation."""
+    p_spec = sh.params_pspecs(params, mesh)
+    o_spec = adamw.AdamWState(step=P(), m=p_spec, v=p_spec)
+    b_spec = sh.batch_pspecs(batch, mesh)
+    s = lambda t: jax.tree_util.tree_map(
+        lambda q: NamedSharding(mesh, q), t,
+        is_leaf=lambda x: isinstance(x, P))
+    step = jax.jit(
+        make_train_step(api, opt_cfg, compression),
+        in_shardings=(s(p_spec), s(o_spec), s(b_spec)),
+        out_shardings=(s(p_spec), s(o_spec), None),
+        donate_argnums=(0, 1))
+    return step, (p_spec, o_spec, b_spec)
+
+
+class StragglerWatchdog:
+    """EWMA step-time monitor — flags steps that exceed factor×mean.
+
+    On real fleets this feeds the controller that re-schedules slow hosts;
+    here it logs and counts (exercised by tests with an injected delay)."""
+
+    def __init__(self, factor: float = 3.0):
+        self.factor = factor
+        self.ewma: Optional[float] = None
+        self.flagged = 0
+
+    def observe(self, dt: float) -> bool:
+        slow = self.ewma is not None and dt > self.factor * self.ewma
+        self.ewma = dt if self.ewma is None else 0.9 * self.ewma + 0.1 * dt
+        if slow:
+            self.flagged += 1
+        return slow
+
+
+def run(api: ModelAPI, train_cfg: TrainConfig, mesh=None,
+        batch_size: int = 8, seq: int = 256, seed: int = 0,
+        data_iter=None, verbose: bool = True) -> dict:
+    """Fault-tolerant training loop with auto-resume."""
+    mesh = mesh or make_host_mesh()
+    rng = jax.random.PRNGKey(seed)
+    params = api.init(rng)
+    opt_state = adamw.init(params)
+    data_iter = data_iter or synthetic_batches(api.cfg, batch_size, seq,
+                                               seed=seed)
+    first = next(data_iter)
+    step_fn, _ = shard_train_fns(api, mesh, params, opt_state, first,
+                                 train_cfg.opt, train_cfg.grad_compression)
+
+    ckpt = CheckpointManager(train_cfg.ckpt_dir, keep=train_cfg.keep)
+    start = 0
+    restored = ckpt.restore_latest((params, opt_state))
+    if restored is not None:
+        (params, opt_state), start = restored
+        if verbose:
+            print(f"[train] resumed from step {start}")
+
+    dog = StragglerWatchdog(train_cfg.straggler_factor)
+    losses = []
+    t_step = time.perf_counter()
+    batch = first
+    for i in range(start, train_cfg.steps):
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        batch = next(data_iter)
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        dt = time.perf_counter() - t_step
+        t_step = time.perf_counter()
+        if dog.observe(dt) and verbose:
+            print(f"[train] straggler step {i}: {dt * 1e3:.0f} ms")
+        if verbose and (i % train_cfg.log_every == 0
+                        or i == train_cfg.steps - 1):
+            print(f"[train] step {i:5d} loss {loss:.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} "
+                  f"lr {float(metrics['lr']):.2e} {dt * 1e3:.0f} ms")
+        if (i + 1) % train_cfg.ckpt_every == 0 or i == train_cfg.steps - 1:
+            ckpt.save((params, opt_state), step=i + 1)
+    return dict(losses=losses, params=params, opt_state=opt_state,
+                straggler_flags=dog.flagged)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--ckpt-dir", default="checkpoints")
+    ap.add_argument("--compression", default="none")
+    args = ap.parse_args(argv)
+    cfg = (cfglib.get_reduced(args.arch) if args.reduced
+           else cfglib.get(args.arch))
+    api = build(cfg)
+    tc = TrainConfig(steps=args.steps, ckpt_dir=args.ckpt_dir,
+                     grad_compression=args.compression)
+    out = run(api, tc, batch_size=args.batch, seq=args.seq)
+    print(f"final loss: {out['losses'][-1]:.4f}  "
+          f"(first {out['losses'][0]:.4f})")
+
+
+if __name__ == "__main__":
+    main()

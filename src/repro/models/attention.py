@@ -1,0 +1,210 @@
+"""Grouped-query attention: training (full/windowed causal) and decode.
+
+Shapes follow the [batch, seq, heads, head_dim] convention.  KV heads are
+repeated to query heads with a reshape-free einsum grouping so that GQA costs
+no extra HBM.  The Pallas flash kernel (:mod:`repro.kernels.flash_attention`)
+is a drop-in replacement for `_sdpa_train` on TPU; the jnp path is used for
+CPU smoke tests and the dry-run lowering.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ArchConfig, apply_rope, dense_init
+
+NEG_INF = -1e30
+
+
+class AttnParams(NamedTuple):
+    wq: jax.Array     # [D, H, hd]
+    wk: jax.Array     # [D, KV, hd]
+    wv: jax.Array     # [D, KV, hd]
+    wo: jax.Array     # [H, hd, D]
+
+
+def init_attn(key, cfg: ArchConfig, dtype=None) -> AttnParams:
+    dtype = dtype or cfg.dtype
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return AttnParams(
+        wq=dense_init(k1, (d, h, hd), in_axis=0, dtype=dtype),
+        wk=dense_init(k2, (d, kv, hd), in_axis=0, dtype=dtype),
+        wv=dense_init(k3, (d, kv, hd), in_axis=0, dtype=dtype),
+        wo=dense_init(k4, (h, hd, d), in_axis=0, dtype=dtype),
+    )
+
+
+def _group_heads(q: jax.Array, n_kv: int) -> jax.Array:
+    """[B,S,H,hd] -> [B,S,KV,G,hd] grouping query heads per KV head."""
+    b, s, h, hd = q.shape
+    return q.reshape(b, s, n_kv, h // n_kv, hd)
+
+
+def _sdpa_naive(q, k, v, *, causal: bool, window: int = 0,
+                q_offset: int = 0):
+    """Grouped SDPA materializing the full [Sq, Sk] logits (baseline).
+
+    q: [B,Sq,H,hd]; k,v: [B,Sk,KV,hd].  fp32 softmax accumulation.
+    """
+    b, sq, h, hd = q.shape
+    kvh = k.shape[2]
+    qg = _group_heads(q, kvh)                                # [B,Sq,KV,G,hd]
+    scale = hd ** -0.5
+    logits = jnp.einsum("bqkgh,bskh->bkgqs", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    qpos = jnp.arange(sq) + q_offset
+    kpos = jnp.arange(k.shape[1])
+    mask = jnp.ones((sq, k.shape[1]), bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window:
+        mask &= qpos[:, None] - kpos[None, :] < window
+    logits = jnp.where(mask, logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", p, v)
+    return out.reshape(b, sq, h, hd)
+
+
+def _sdpa_chunked(q, k, v, *, causal: bool, window: int = 0,
+                  q_offset: int = 0, chunk: int = 1024):
+    """Flash-style streaming SDPA: online softmax over KV chunks.
+
+    The jnp twin of the Pallas flash kernel — peak live memory per layer is
+    one [Sq, chunk] logits block instead of [Sq, Sk], which converts the
+    memory-bound baseline into a compute-bound program (EXPERIMENTS §Perf).
+    Fully unrolled over chunks so cost_analysis accounting stays exact.
+    """
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    kvh = k.shape[2]
+    chunk = min(chunk, sk)
+    assert sk % chunk == 0
+    nc = sk // chunk
+    qg = _group_heads(q, kvh).astype(jnp.float32)
+    scale = hd ** -0.5
+    qpos = jnp.arange(sq) + q_offset
+
+    m = jnp.full((b, kvh, h // kvh, sq), NEG_INF, jnp.float32)
+    l = jnp.zeros((b, kvh, h // kvh, sq), jnp.float32)
+    acc = jnp.zeros((b, kvh, h // kvh, sq, hd), jnp.float32)
+    q_last = sq - 1 + q_offset            # static: q_offset is a python int
+    for c in range(nc):
+        if causal and c * chunk > q_last:
+            continue                      # fully-masked chunk: skip
+        kc = jax.lax.dynamic_slice_in_dim(k, c * chunk, chunk, axis=1)
+        vc = jax.lax.dynamic_slice_in_dim(v, c * chunk, chunk, axis=1)
+        s = jnp.einsum("bqkgh,bskh->bkgqs", qg, kc.astype(jnp.float32),
+                       preferred_element_type=jnp.float32) * scale
+        kpos = c * chunk + jnp.arange(chunk)
+        mask = jnp.ones((sq, chunk), bool)
+        if causal:
+            mask &= qpos[:, None] >= kpos[None, :]
+        if window:
+            mask &= qpos[:, None] - kpos[None, :] < window
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l = l * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bkgqs,bskh->bkgqh", p, vc.astype(jnp.float32))
+        m = m_new
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = jnp.moveaxis(out, 3, 1).reshape(b, sq, h, hd)
+    return out.astype(q.dtype)
+
+
+def _sdpa_train(q, k, v, *, causal: bool, window: int = 0,
+                q_offset: int = 0, impl: str = "naive", chunk: int = 1024):
+    if impl == "chunked" and k.shape[1] > chunk:
+        return _sdpa_chunked(q, k, v, causal=causal, window=window,
+                             q_offset=q_offset, chunk=chunk)
+    return _sdpa_naive(q, k, v, causal=causal, window=window,
+                       q_offset=q_offset)
+
+
+def attention_train(params: AttnParams, x: jax.Array, cfg: ArchConfig,
+                    *, causal: bool = True, window: int = 0,
+                    pos: Optional[jax.Array] = None,
+                    use_rope: bool = True) -> jax.Array:
+    b, s, _ = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, params.wq)
+    k = jnp.einsum("bsd,dhk->bshk", x, params.wk)
+    v = jnp.einsum("bsd,dhk->bshk", x, params.wv)
+    if use_rope:
+        if pos is None:
+            pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+    o = _sdpa_train(q, k, v, causal=causal, window=window,
+                    impl=cfg.attn_impl, chunk=cfg.attn_chunk)
+    return jnp.einsum("bshk,hkd->bsd", o, params.wo)
+
+
+def cross_attention(params: AttnParams, x: jax.Array, kv_src: jax.Array,
+                    cfg: ArchConfig) -> jax.Array:
+    """Encoder-decoder cross attention (no mask, no rope)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, params.wq)
+    k = jnp.einsum("bsd,dhk->bshk", kv_src, params.wk)
+    v = jnp.einsum("bsd,dhk->bshk", kv_src, params.wv)
+    o = _sdpa_train(q, k, v, causal=False)
+    return jnp.einsum("bshk,hkd->bsd", o, params.wo)
+
+
+class KVCache(NamedTuple):
+    """Decode-time KV cache for one attention layer (or stacked [L, ...])."""
+    k: jax.Array         # [B, S_max, KV, hd]
+    v: jax.Array         # [B, S_max, KV, hd]
+
+    @staticmethod
+    def init(cfg: ArchConfig, batch: int, s_max: int,
+             dtype=None, layers: Optional[int] = None) -> "KVCache":
+        dtype = dtype or cfg.dtype
+        shape = (batch, s_max, cfg.n_kv_heads, cfg.hd)
+        if layers is not None:
+            shape = (layers,) + shape
+        return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))
+
+
+def attention_decode(params: AttnParams, x: jax.Array, cache: KVCache,
+                     pos: jax.Array, cfg: ArchConfig,
+                     *, window: int = 0, use_rope: bool = True):
+    """One-token decode step.  x: [B, 1, D]; pos: [] current position.
+
+    Returns (out [B,1,D], updated cache).  The new K/V is scattered into
+    the ring position ``pos`` (or ``pos % window`` for local attention).
+    """
+    b = x.shape[0]
+    q = jnp.einsum("bsd,dhk->bshk", x, params.wq)
+    k = jnp.einsum("bsd,dhk->bshk", x, params.wk)
+    v = jnp.einsum("bsd,dhk->bshk", x, params.wv)
+    if use_rope:
+        p = jnp.broadcast_to(pos[None], (b, 1))
+        q = apply_rope(q, p, cfg.rope_theta)
+        k = apply_rope(k, p, cfg.rope_theta)
+    s_max = cache.k.shape[1]
+    slot = (pos % s_max).astype(jnp.int32)
+    ck = jax.lax.dynamic_update_slice_in_dim(cache.k, k, slot, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache.v, v, slot, axis=1)
+
+    kvh = ck.shape[2]
+    qg = _group_heads(q, kvh)                               # [B,1,KV,G,hd]
+    scale = cfg.hd ** -0.5
+    logits = jnp.einsum("bqkgh,bskh->bkgqs", qg, ck,
+                        preferred_element_type=jnp.float32) * scale
+    # ring-buffer aware positions: slot j currently holds absolute position
+    # pos - ((pos - j) mod s_max); entries "from the future" are invalid.
+    kpos = jnp.arange(s_max)
+    abs_pos = pos - ((pos - kpos) % s_max)
+    valid = abs_pos >= 0
+    if window:
+        valid &= abs_pos > pos - window
+    logits = jnp.where(valid[None, None, None, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", probs, cv)
+    o = o.reshape(b, 1, cfg.n_heads, cfg.hd)
+    out = jnp.einsum("bshk,hkd->bsd", o, params.wo)
+    return out, KVCache(k=ck, v=cv)

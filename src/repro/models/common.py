@@ -1,0 +1,164 @@
+"""Shared model components: config, norms, rotary embeddings, init.
+
+All models are pure functions over parameter pytrees (dicts of jnp arrays)
+— no framework dependency — so they compose directly with pjit/shard_map
+and the sharding rules in :mod:`repro.parallel.sharding`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    """One unified config covering every assigned architecture family."""
+
+    name: str
+    family: str                       # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int                      # 0 for attention-free archs
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0                 # derived when 0
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 1
+    n_shared_experts: int = 0
+    shared_expert_ff: int = 0
+    moe_every: int = 1                # MoE layer stride (1 = every layer)
+    capacity_factor: float = 1.25
+    # --- recurrent / hybrid ---
+    rwkv_head_dim: int = 64
+    rg_lru_width: int = 0             # RG-LRU hidden width (0 => d_model)
+    conv_width: int = 4
+    window: int = 2048                # local-attention window (hybrid)
+    attn_every: int = 3               # hybrid pattern: 1 attn per N blocks
+    # --- enc-dec (audio) ---
+    n_enc_layers: int = 0
+    n_frames: int = 1500              # stubbed audio frame embeddings
+    # --- vlm ---
+    n_patches: int = 256              # stubbed vision patch embeddings
+    # --- common ---
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = True
+    dtype: Any = jnp.bfloat16
+    # full-attention archs cannot run the 500k-token cell (DESIGN.md §6)
+    subquadratic: bool = False
+    # --- lowering / perf knobs (see EXPERIMENTS.md §Perf) ---
+    # unroll layer loops: exact cost_analysis accounting (XLA counts while
+    # bodies once) and lets XLA schedule across layer boundaries
+    unroll_layers: bool = False
+    # "naive" materializes [S,S] logits; "chunked" streams KV blocks with an
+    # online softmax (the jnp twin of the Pallas flash kernel)
+    attn_impl: str = "naive"
+    attn_chunk: int = 1024
+    # pad the expert count up to a multiple of 16 so EP shards the expert
+    # dim instead of falling back to per-expert FF sharding (qwen: 60->64)
+    moe_pad_experts: bool = False
+    # process the WKV recurrence in chunks of this many tokens: state HBM
+    # traffic drops ~chunk x (0 = per-token scan)
+    rwkv_chunk: int = 0
+
+    @property
+    def hd(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // max(self.n_heads, 1)
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    def reduced(self, **overrides) -> "ArchConfig":
+        """A smoke-test-sized config of the same family (CPU friendly)."""
+        small = dict(
+            n_layers=min(self.n_layers, 2),
+            d_model=min(self.d_model, 64),
+            n_heads=min(self.n_heads, 4) if self.n_heads else 0,
+            n_kv_heads=min(self.n_kv_heads, 2) if self.n_kv_heads else 0,
+            d_ff=min(self.d_ff, 128),
+            vocab=min(self.vocab, 512),
+            n_experts=min(self.n_experts, 4),
+            n_shared_experts=min(self.n_shared_experts, 1),
+            shared_expert_ff=min(self.shared_expert_ff, 128),
+            n_enc_layers=min(self.n_enc_layers, 2),
+            n_frames=min(self.n_frames, 32),
+            n_patches=min(self.n_patches, 8),
+            window=min(self.window, 32),
+            rg_lru_width=min(self.rg_lru_width, 64) if self.rg_lru_width
+            else 0,
+            rwkv_head_dim=min(self.rwkv_head_dim, 16),
+            head_dim=0,
+            dtype=jnp.float32,
+        )
+        small.update(overrides)
+        return dataclasses.replace(self, **small)
+
+
+# --------------------------------------------------------------------------
+# numerics
+# --------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    y = x32 * jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x, scale, bias, eps=1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.mean((x32 - mu) ** 2, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale + bias).astype(dt)
+
+
+def rope_freqs(hd: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x: jax.Array, pos: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, H, hd]; pos: [..., S] absolute positions."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                          # [hd/2]
+    ang = pos[..., None].astype(jnp.float32) * freqs       # [..., S, hd/2]
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def dense_init(key, shape, in_axis: int = -2, dtype=jnp.bfloat16):
+    fan_in = shape[in_axis]
+    std = 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.bfloat16):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+def split_keys(key, n: int):
+    return list(jax.random.split(key, n))
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean next-token CE in fp32. logits [..., V], labels int [...]."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1)
+    return jnp.mean(nll)

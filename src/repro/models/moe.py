@@ -1,0 +1,118 @@
+"""Mixture-of-Experts FFN with capacity-bounded token dispatch.
+
+MaxText-style dense dispatch: tokens are routed top-k, each expert processes
+a fixed capacity ``C`` of tokens (static shapes — TPU friendly), and the
+expert einsums batch over the expert dimension so that sharding the leading
+``E`` axis over the ``model`` mesh axis gives expert parallelism (EP) with
+an all-to-all-free one-hot dispatch (XLA lowers the combine to reduce
+-scatter/all-gather pairs on the EP axis).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ArchConfig, dense_init
+
+
+class MoEParams(NamedTuple):
+    router: jax.Array        # [D, E]
+    w_gate: jax.Array        # [E, D, F]
+    w_up: jax.Array          # [E, D, F]
+    w_down: jax.Array        # [E, F, D]
+    shared_gate: Optional[jax.Array]   # [D, Fs] or None
+    shared_up: Optional[jax.Array]
+    shared_down: Optional[jax.Array]   # [Fs, D]
+
+
+def padded_experts(cfg: ArchConfig) -> int:
+    """Expert-array size: padded to a multiple of 16 when the EP knob is on
+    (padded experts receive no tokens — the router stays at n_experts)."""
+    if cfg.moe_pad_experts:
+        return -(-cfg.n_experts // 16) * 16
+    return cfg.n_experts
+
+
+def init_moe(key, cfg: ArchConfig, dtype=None) -> MoEParams:
+    dtype = dtype or cfg.dtype
+    d, e, f = cfg.d_model, padded_experts(cfg), cfg.d_ff
+    ks = jax.random.split(key, 7)
+    fs = cfg.shared_expert_ff or (cfg.n_shared_experts * f)
+    shared = cfg.n_shared_experts > 0
+    return MoEParams(
+        router=dense_init(ks[0], (d, cfg.n_experts), in_axis=0,
+                          dtype=jnp.float32),
+        w_gate=dense_init(ks[1], (e, d, f), in_axis=1, dtype=dtype),
+        w_up=dense_init(ks[2], (e, d, f), in_axis=1, dtype=dtype),
+        w_down=dense_init(ks[3], (e, f, d), in_axis=1, dtype=dtype),
+        shared_gate=dense_init(ks[4], (d, fs), in_axis=0, dtype=dtype)
+        if shared else None,
+        shared_up=dense_init(ks[5], (d, fs), in_axis=0, dtype=dtype)
+        if shared else None,
+        shared_down=dense_init(ks[6], (fs, d), in_axis=0, dtype=dtype)
+        if shared else None,
+    )
+
+
+def moe_ffn(params: MoEParams, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """x: [B, S, D] -> [B, S, D].  Top-k routing with capacity dropping."""
+    b, s, d = x.shape
+    n = b * s
+    e, k = padded_experts(cfg), cfg.top_k
+    cap = max(1, int(cfg.capacity_factor * n * k / cfg.n_experts))
+
+    xt = x.reshape(n, d)
+    logits = jnp.einsum("nd,de->ne", xt.astype(jnp.float32), params.router)
+    gates = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(gates, k)                 # [n, k]
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+
+    # position of each (token, choice) in its expert's queue (padded
+    # experts — indices >= n_experts — never appear in topi)
+    onehot = jax.nn.one_hot(topi, e, dtype=jnp.int32)    # [n, k, e]
+    pos_in_e = (jnp.cumsum(onehot.reshape(n * k, e), axis=0)
+                .reshape(n, k, e) * onehot).sum(-1) - 1  # [n, k]
+    keep = pos_in_e < cap
+    # dispatch tensor [n, k] -> scatter into [e, cap]
+    flat_e = topi.reshape(-1)
+    flat_pos = jnp.where(keep, pos_in_e, cap).reshape(-1)   # cap = dropped
+    token_id = jnp.broadcast_to(jnp.arange(n)[:, None], (n, k)).reshape(-1)
+
+    slots = jnp.zeros((e, cap + 1), jnp.int32).at[flat_e, flat_pos].set(
+        token_id + 1, mode="drop")[:, :cap]              # 0 = empty slot
+    occupied = slots > 0
+    gather_ids = jnp.maximum(slots - 1, 0)               # [e, cap]
+    xe = xt[gather_ids] * occupied[..., None]            # [e, cap, d]
+
+    h = jnp.einsum("ecd,edf->ecf", xe, params.w_gate)
+    u = jnp.einsum("ecd,edf->ecf", xe, params.w_up)
+    y = jnp.einsum("ecf,efd->ecd", jax.nn.silu(h) * u, params.w_down)
+
+    # combine: scatter expert outputs back with gate weights
+    gate_flat = jnp.where(keep, topv, 0.0).reshape(-1)
+    wsl = jnp.zeros((e, cap + 1), y.dtype).at[flat_e, flat_pos].set(
+        gate_flat.astype(y.dtype), mode="drop")[:, :cap]
+    out = jnp.zeros((n + 1, d), y.dtype).at[slots.reshape(-1)].add(
+        (y * wsl[..., None]).reshape(e * cap, d), mode="drop")[1:]
+
+    if params.shared_gate is not None:
+        hs = jnp.einsum("nd,df->nf", xt, params.shared_gate)
+        us = jnp.einsum("nd,df->nf", xt, params.shared_up)
+        out = out + jnp.einsum("nf,fd->nd", jax.nn.silu(hs) * us,
+                               params.shared_down)
+    return out.reshape(b, s, d).astype(x.dtype)
+
+
+def aux_load_balance_loss(x: jax.Array, params: MoEParams,
+                          cfg: ArchConfig) -> jax.Array:
+    """Switch-style load-balancing auxiliary loss."""
+    n = x.shape[0] * x.shape[1]
+    logits = jnp.einsum("nd,de->ne",
+                        x.reshape(n, -1).astype(jnp.float32), params.router)
+    gates = jax.nn.softmax(logits, axis=-1)
+    top1 = jnp.argmax(gates, axis=-1)
+    frac = jnp.mean(jax.nn.one_hot(top1, cfg.n_experts), axis=0)
+    prob = jnp.mean(gates, axis=0)
+    return cfg.n_experts * jnp.sum(frac * prob)

@@ -1,0 +1,123 @@
+"""Model registry: one uniform API over all assigned architecture families.
+
+``build(cfg)`` returns a :class:`ModelAPI` with
+
+* ``init(rng)``                      -> params
+* ``loss(params, batch)``            -> scalar train loss
+* ``decode_init(params, batch, s)``  -> decode state (KV cache / recurrent)
+* ``decode_step(params, state, tok)``-> (logits, state)
+* ``prefill(params, batch, s)``      -> (logits, state)   (where meaningful)
+
+``batch`` is a dict: always ``tokens`` [B, S]; plus ``frames`` [B, T, D]
+(audio stub) or ``patches`` [B, P, D] (vlm stub).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import rglru, rwkv6, transformer, whisper
+from repro.models.common import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelAPI:
+    cfg: ArchConfig
+    init: Callable[[jax.Array], Any]
+    loss: Callable[[Any, dict], jax.Array]
+    decode_init: Callable[[Any, dict, int], Any]
+    decode_step: Callable[[Any, Any, jax.Array], tuple]
+    prefill: Optional[Callable[[Any, dict, int], tuple]] = None
+
+
+def _transformer_api(cfg: ArchConfig) -> ModelAPI:
+    prefix_key = {"vlm": "patches"}.get(cfg.family)
+
+    def loss(params, batch):
+        pe = batch.get(prefix_key) if prefix_key else None
+        return transformer.lm_loss(params, batch["tokens"], cfg,
+                                   prefix_embed=pe)
+
+    def decode_init(params, batch, s_max):
+        b = batch["tokens"].shape[0]
+        st = transformer.init_decode(cfg, b, s_max)
+        return st
+
+    def decode_step(params, st, token):
+        return transformer.decode_step(params, st, token, cfg)
+
+    def prefill(params, batch, s_max):
+        return transformer.prefill(params, batch["tokens"], cfg, s_max)
+
+    return ModelAPI(cfg=cfg,
+                    init=lambda rng: transformer.init_lm(rng, cfg),
+                    loss=loss, decode_init=decode_init,
+                    decode_step=decode_step, prefill=prefill)
+
+
+def _rwkv_api(cfg: ArchConfig) -> ModelAPI:
+    def decode_init(params, batch, s_max):
+        return rwkv6.init_state(cfg, batch["tokens"].shape[0])
+
+    return ModelAPI(
+        cfg=cfg,
+        init=lambda rng: rwkv6.init_rwkv(rng, cfg),
+        loss=lambda p, b: rwkv6.lm_loss(p, b["tokens"], cfg),
+        decode_init=decode_init,
+        decode_step=lambda p, st, t: rwkv6.decode_step(p, st, t, cfg))
+
+
+def _griffin_api(cfg: ArchConfig) -> ModelAPI:
+    def decode_init(params, batch, s_max):
+        return rglru.init_state(cfg, batch["tokens"].shape[0])
+
+    return ModelAPI(
+        cfg=cfg,
+        init=lambda rng: rglru.init_griffin(rng, cfg),
+        loss=lambda p, b: rglru.lm_loss(p, b["tokens"], cfg),
+        decode_init=decode_init,
+        decode_step=lambda p, st, t: rglru.decode_step(p, st, t, cfg))
+
+
+def _whisper_api(cfg: ArchConfig) -> ModelAPI:
+    max_pos = 33_024   # covers train_4k and decode_32k target positions
+
+    def decode_init(params, batch, s_max):
+        return whisper.init_decode(params, batch["frames"], cfg, s_max)
+
+    return ModelAPI(
+        cfg=cfg,
+        init=lambda rng: whisper.init_whisper(rng, cfg, max_pos=max_pos),
+        loss=lambda p, b: whisper.loss(p, b["frames"], b["tokens"], cfg),
+        decode_init=decode_init,
+        decode_step=lambda p, st, t: whisper.decode_step(p, st, t, cfg))
+
+
+def build(cfg: ArchConfig) -> ModelAPI:
+    if cfg.family in ("dense", "moe", "vlm"):
+        return _transformer_api(cfg)
+    if cfg.family == "ssm":
+        return _rwkv_api(cfg)
+    if cfg.family == "hybrid":
+        return _griffin_api(cfg)
+    if cfg.family == "audio":
+        return _whisper_api(cfg)
+    raise ValueError(f"unknown family: {cfg.family}")
+
+
+def make_batch(cfg: ArchConfig, batch: int, seq: int, rng=None) -> dict:
+    """A synthetic batch of the right structure (tests/examples)."""
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(rng)
+    out = {"tokens": jax.random.randint(k1, (batch, seq), 0, cfg.vocab,
+                                        jnp.int32)}
+    if cfg.family == "audio":
+        out["frames"] = jax.random.normal(
+            k2, (batch, cfg.n_frames, cfg.d_model), jnp.float32)
+    if cfg.family == "vlm":
+        out["patches"] = jax.random.normal(
+            k2, (batch, cfg.n_patches, cfg.d_model), jnp.float32)
+    return out

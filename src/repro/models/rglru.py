@@ -1,0 +1,312 @@
+"""RecurrentGemma / Griffin (arXiv:2402.19427): RG-LRU recurrent blocks
+interleaved with local (sliding-window) attention at a 1:2 ratio.
+
+The RG-LRU recurrence ``h_t = a_t h_{t-1} + sqrt(1-a_t^2) (i_t x_t)`` is a
+linear recurrence, so training uses ``jax.lax.associative_scan`` (O(log S)
+depth); decode keeps an O(1) state — ``long_500k`` runs for this arch.
+Layers follow the repeating super-block (recurrent, recurrent, local-attn);
+super-blocks are stacked and scanned to keep the lowered HLO small.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as A
+from repro.models.common import (ArchConfig, cross_entropy, dense_init,
+                                 embed_init, rms_norm, split_keys)
+
+LRU_C = 8.0   # Griffin's fixed exponent scale
+
+
+class GLUParams(NamedTuple):
+    w_gate: jax.Array
+    w_up: jax.Array
+    w_down: jax.Array
+
+
+class RecurrentBlock(NamedTuple):
+    ln: jax.Array
+    w_x: jax.Array        # [D, R] input branch
+    w_y: jax.Array        # [D, R] gate branch
+    conv_w: jax.Array     # [4, R] depthwise causal conv
+    conv_b: jax.Array     # [R]
+    lam: jax.Array        # [R] RG-LRU Λ
+    w_a: jax.Array        # [R, R] recurrence gate
+    b_a: jax.Array        # [R]
+    w_i: jax.Array        # [R, R] input gate
+    b_i: jax.Array        # [R]
+    w_o: jax.Array        # [R, D]
+    ln_mlp: jax.Array
+    mlp: GLUParams
+
+
+class AttnBlock(NamedTuple):
+    ln: jax.Array
+    attn: A.AttnParams
+    ln_mlp: jax.Array
+    mlp: GLUParams
+
+
+class SuperBlock(NamedTuple):
+    rec1: RecurrentBlock
+    rec2: RecurrentBlock
+    attn: AttnBlock
+
+
+class GriffinParams(NamedTuple):
+    embed: jax.Array
+    supers: SuperBlock       # stacked [n_super, ...]
+    tail: RecurrentBlock     # stacked [n_tail, ...] leftover rec layers
+    ln_f: jax.Array
+
+
+def n_super(cfg: ArchConfig) -> int:
+    return cfg.n_layers // 3
+
+
+def n_tail(cfg: ArchConfig) -> int:
+    return cfg.n_layers % 3
+
+
+def _init_glu(key, d, f, dt) -> GLUParams:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return GLUParams(
+        w_gate=dense_init(k1, (d, f), in_axis=0, dtype=dt),
+        w_up=dense_init(k2, (d, f), in_axis=0, dtype=dt),
+        w_down=dense_init(k3, (f, d), in_axis=0, dtype=dt))
+
+
+def _init_rec(key, cfg: ArchConfig) -> RecurrentBlock:
+    d, dt = cfg.d_model, cfg.dtype
+    r = cfg.rg_lru_width or d
+    ks = split_keys(key, 7)
+    return RecurrentBlock(
+        ln=jnp.zeros((d,), dt),
+        w_x=dense_init(ks[0], (d, r), in_axis=0, dtype=dt),
+        w_y=dense_init(ks[1], (d, r), in_axis=0, dtype=dt),
+        conv_w=dense_init(ks[2], (cfg.conv_width, r), in_axis=0, dtype=dt),
+        conv_b=jnp.zeros((r,), dt),
+        lam=jnp.full((r,), 2.0, jnp.float32),   # a ≈ 0.88^8 decay at init
+        w_a=dense_init(ks[3], (r, r), in_axis=0, dtype=dt),
+        b_a=jnp.zeros((r,), dt),
+        w_i=dense_init(ks[4], (r, r), in_axis=0, dtype=dt),
+        b_i=jnp.zeros((r,), dt),
+        w_o=dense_init(ks[5], (r, d), in_axis=0, dtype=dt),
+        ln_mlp=jnp.zeros((d,), dt),
+        mlp=_init_glu(ks[6], d, cfg.d_ff, dt))
+
+
+def _init_attn_block(key, cfg: ArchConfig) -> AttnBlock:
+    k1, k2 = jax.random.split(key)
+    return AttnBlock(
+        ln=jnp.zeros((cfg.d_model,), cfg.dtype),
+        attn=A.init_attn(k1, cfg),
+        ln_mlp=jnp.zeros((cfg.d_model,), cfg.dtype),
+        mlp=_init_glu(k2, cfg.d_model, cfg.d_ff, cfg.dtype))
+
+
+def init_griffin(key, cfg: ArchConfig) -> GriffinParams:
+    kt, ks_, ktl = jax.random.split(key, 3)
+
+    def one_super(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return SuperBlock(rec1=_init_rec(k1, cfg), rec2=_init_rec(k2, cfg),
+                          attn=_init_attn_block(k3, cfg))
+
+    supers = jax.vmap(one_super)(jax.random.split(ks_, n_super(cfg)))
+    tail = jax.vmap(lambda k: _init_rec(k, cfg))(
+        jax.random.split(ktl, max(n_tail(cfg), 1)))
+    return GriffinParams(
+        embed=embed_init(kt, (cfg.vocab, cfg.d_model), cfg.dtype),
+        supers=supers, tail=tail,
+        ln_f=jnp.zeros((cfg.d_model,), cfg.dtype))
+
+
+def _glu(p: GLUParams, x):
+    return jnp.einsum(
+        "bsf,fd->bsd",
+        jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, p.w_gate))
+        * jnp.einsum("bsd,df->bsf", x, p.w_up), p.w_down)
+
+
+# --------------------------------------------------------------------------
+# RG-LRU
+# --------------------------------------------------------------------------
+
+def _rglru_scan(a: jax.Array, b: jax.Array, h0=None):
+    """h_t = a_t h_{t-1} + b_t along axis 1 via associative scan (fp32)."""
+    if h0 is not None:
+        # fold the carried state into the first step
+        b = b.at[:, 0].add(a[:, 0] * h0)
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def _rec_train(p: RecurrentBlock, x: jax.Array) -> jax.Array:
+    """x: [B,S,D] -> [B,S,D]; full-sequence recurrent branch."""
+    xb = jnp.einsum("bsd,dr->bsr", x, p.w_x)
+    yb = jnp.einsum("bsd,dr->bsr", x, p.w_y)
+    # causal depthwise conv (width W)
+    w = p.conv_w
+    c = sum(jnp.pad(xb, ((0, 0), (i, 0), (0, 0)))[:, :xb.shape[1]]
+            * w[w.shape[0] - 1 - i][None, None, :]
+            for i in range(w.shape[0])) + p.conv_b
+    r = jax.nn.sigmoid(jnp.einsum("bsr,rq->bsq", c, p.w_a)
+                       + p.b_a).astype(jnp.float32)
+    i = jax.nn.sigmoid(jnp.einsum("bsr,rq->bsq", c, p.w_i) + p.b_i)
+    log_a = -LRU_C * jax.nn.softplus(p.lam) * r          # fp32
+    a = jnp.exp(log_a)
+    gated = (jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+             * (i * c).astype(jnp.float32))
+    h = _rglru_scan(a, gated)
+    out = (h.astype(x.dtype) * jax.nn.gelu(yb))
+    return jnp.einsum("bsr,rd->bsd", out, p.w_o)
+
+
+class RecState(NamedTuple):
+    conv: jax.Array     # [B, W-1, R] last inputs
+    h: jax.Array        # [B, R] fp32
+
+
+def _rec_decode(p: RecurrentBlock, x: jax.Array, st: RecState):
+    """x: [B,1,D] one token."""
+    xb = jnp.einsum("bsd,dr->bsr", x, p.w_x)[:, 0]       # [B,R]
+    yb = jnp.einsum("bsd,dr->bsr", x, p.w_y)[:, 0]
+    w = p.conv_w
+    hist = jnp.concatenate([st.conv, xb[:, None]], axis=1)   # [B,W,R]
+    c = jnp.einsum("bwr,wr->br", hist, w) + p.conv_b
+    r = jax.nn.sigmoid(c @ p.w_a + p.b_a).astype(jnp.float32)
+    i = jax.nn.sigmoid(c @ p.w_i + p.b_i)
+    log_a = -LRU_C * jax.nn.softplus(p.lam) * r
+    a = jnp.exp(log_a)
+    h = a * st.h + jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2 * log_a), 1e-12)) \
+        * (i * c).astype(jnp.float32)
+    out = (h.astype(x.dtype) * jax.nn.gelu(yb)) @ p.w_o
+    return out[:, None], RecState(conv=hist[:, 1:], h=h)
+
+
+# --------------------------------------------------------------------------
+# full model
+# --------------------------------------------------------------------------
+
+def _rec_block_train(p: RecurrentBlock, x, cfg):
+    x = x + _rec_train(p, rms_norm(x, p.ln, cfg.norm_eps))
+    x = x + _glu(p.mlp, rms_norm(x, p.ln_mlp, cfg.norm_eps))
+    return x
+
+
+def _attn_block_train(p: AttnBlock, x, cfg):
+    x = x + A.attention_train(p.attn, rms_norm(x, p.ln, cfg.norm_eps), cfg,
+                              causal=True, window=cfg.window)
+    x = x + _glu(p.mlp, rms_norm(x, p.ln_mlp, cfg.norm_eps))
+    return x
+
+
+def forward(params: GriffinParams, tokens: jax.Array, cfg: ArchConfig):
+    x = params.embed[tokens].astype(cfg.dtype)
+
+    def body(x, sb: SuperBlock):
+        x = _rec_block_train(sb.rec1, x, cfg)
+        x = _rec_block_train(sb.rec2, x, cfg)
+        x = _attn_block_train(sb.attn, x, cfg)
+        return x, None
+
+    body_fn = jax.checkpoint(lambda c, sb: body(c, sb))
+    if cfg.unroll_layers:
+        for i in range(n_super(cfg)):
+            sb = jax.tree_util.tree_map(lambda a, i=i: a[i], params.supers)
+            x, _ = body_fn(x, sb)
+    else:
+        x, _ = jax.lax.scan(body_fn, x, params.supers)
+    for i in range(n_tail(cfg)):
+        tl = jax.tree_util.tree_map(lambda a, i=i: a[i], params.tail)
+        x = _rec_block_train(tl, x, cfg)
+    x = rms_norm(x, params.ln_f, cfg.norm_eps)
+    return jnp.einsum("bsd,dv->bsv", x,
+                      params.embed.T.astype(cfg.dtype))
+
+
+def lm_loss(params: GriffinParams, tokens: jax.Array, cfg: ArchConfig):
+    logits = forward(params, tokens, cfg)
+    return cross_entropy(logits[:, :-1], tokens[:, 1:])
+
+
+class GriffinState(NamedTuple):
+    rec1: RecState        # stacked [n_super, ...]
+    rec2: RecState
+    attn: A.KVCache       # stacked [n_super, B, window, KV, hd]
+    tail: RecState        # stacked [n_tail, ...]
+    pos: jax.Array
+
+
+def init_state(cfg: ArchConfig, batch: int) -> GriffinState:
+    r = cfg.rg_lru_width or cfg.d_model
+    ns, nt = n_super(cfg), max(n_tail(cfg), 1)
+    mk = lambda n: RecState(
+        conv=jnp.zeros((n, batch, cfg.conv_width - 1, r), cfg.dtype),
+        h=jnp.zeros((n, batch, r), jnp.float32))
+    return GriffinState(
+        rec1=mk(ns), rec2=mk(ns),
+        attn=A.KVCache.init(cfg, batch, cfg.window, layers=ns),
+        tail=mk(nt), pos=jnp.int32(0))
+
+
+def decode_step(params: GriffinParams, st: GriffinState, token: jax.Array,
+                cfg: ArchConfig):
+    x = params.embed[token][:, None, :].astype(cfg.dtype)
+
+    def body(x, inp):
+        sb, s1, s2, kv = inp
+        h = rms_norm(x, sb.rec1.ln, cfg.norm_eps)
+        o, s1n = _rec_decode(sb.rec1, h, s1)
+        x = x + o
+        x = x + _glu(sb.rec1.mlp, rms_norm(x, sb.rec1.ln_mlp, cfg.norm_eps))
+        h = rms_norm(x, sb.rec2.ln, cfg.norm_eps)
+        o, s2n = _rec_decode(sb.rec2, h, s2)
+        x = x + o
+        x = x + _glu(sb.rec2.mlp, rms_norm(x, sb.rec2.ln_mlp, cfg.norm_eps))
+        h = rms_norm(x, sb.attn.ln, cfg.norm_eps)
+        o, kvn = A.attention_decode(sb.attn.attn, h, kv, st.pos, cfg,
+                                    window=cfg.window)
+        x = x + o
+        x = x + _glu(sb.attn.mlp,
+                     rms_norm(x, sb.attn.ln_mlp, cfg.norm_eps))
+        return x, (s1n, s2n, kvn)
+
+    if cfg.unroll_layers:
+        outs = []
+        for i in range(n_super(cfg)):
+            pick = lambda a, i=i: a[i]
+            inp = jax.tree_util.tree_map(
+                pick, (params.supers, st.rec1, st.rec2, st.attn))
+            x, o = body(x, inp)
+            outs.append(o)
+        r1, r2, kv = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *outs)
+    else:
+        x, (r1, r2, kv) = jax.lax.scan(
+            body, x, (params.supers, st.rec1, st.rec2, st.attn))
+
+    def tail_body(x, inp):
+        tl, s = inp
+        h = rms_norm(x, tl.ln, cfg.norm_eps)
+        o, sn = _rec_decode(tl, h, s)
+        x = x + o
+        x = x + _glu(tl.mlp, rms_norm(x, tl.ln_mlp, cfg.norm_eps))
+        return x, sn
+
+    if n_tail(cfg):
+        x, tail_st = jax.lax.scan(tail_body, x, (params.tail, st.tail))
+    else:
+        tail_st = st.tail
+    x = rms_norm(x[:, 0], params.ln_f, cfg.norm_eps)
+    logits = jnp.einsum("bd,dv->bv", x, params.embed.T.astype(cfg.dtype))
+    return logits, GriffinState(rec1=r1, rec2=r2, attn=kv, tail=tail_st,
+                                pos=st.pos + 1)

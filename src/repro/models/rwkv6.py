@@ -1,0 +1,315 @@
+"""RWKV6 "Finch" (arXiv:2404.05892): linear-time LM with data-dependent
+decay.  Attention-free — the per-head state is a [N, N] outer-product
+accumulator, so decode state is O(1) in sequence length and the
+``long_500k`` cell runs (DESIGN.md §6).
+
+Time mixing uses the paper's ddlerp token-shift (low-rank data-dependent
+interpolation) and the diagonal data-dependent decay
+``w_t = exp(-exp(w0 + lora(x)))``; channel mixing is the squared-ReLU MLP.
+Training scans over time (the Pallas chunked kernel in
+``repro.kernels.rwkv_scan`` is the TPU fast path for the same recurrence).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (ArchConfig, cross_entropy, dense_init,
+                                 embed_init, layer_norm, split_keys)
+
+TM_LORA = 32      # token-mix lora rank
+DW_LORA = 64      # decay lora rank
+
+
+class RWKVLayer(NamedTuple):
+    ln1_s: jax.Array
+    ln1_b: jax.Array
+    ln2_s: jax.Array
+    ln2_b: jax.Array
+    # --- time mix ---
+    mu_x: jax.Array        # [D]
+    mu: jax.Array          # [5, D]  (r, k, v, w, g)
+    lora_a: jax.Array      # [D, 5*TM]
+    lora_b: jax.Array      # [5, TM, D]
+    w0: jax.Array          # [D] decay bias (log-log space)
+    w_a: jax.Array         # [D, DW]
+    w_b: jax.Array         # [DW, D]
+    u: jax.Array           # [H, N] per-head bonus
+    wr: jax.Array          # [D, D]
+    wk: jax.Array
+    wv: jax.Array
+    wg: jax.Array
+    wo: jax.Array
+    lnx_s: jax.Array       # [D] per-head group-norm scale
+    lnx_b: jax.Array
+    # --- channel mix ---
+    mu_ck: jax.Array       # [D]
+    mu_cr: jax.Array       # [D]
+    wck: jax.Array         # [D, F]
+    wcv: jax.Array         # [F, D]
+    wcr: jax.Array         # [D, D]
+
+
+class RWKVParams(NamedTuple):
+    embed: jax.Array
+    ln0_s: jax.Array
+    ln0_b: jax.Array
+    layers: RWKVLayer
+    lnf_s: jax.Array
+    lnf_b: jax.Array
+    head: jax.Array
+
+
+def n_heads(cfg: ArchConfig) -> int:
+    return cfg.d_model // cfg.rwkv_head_dim
+
+
+def init_layer(key, cfg: ArchConfig) -> RWKVLayer:
+    d, f, dt = cfg.d_model, cfg.d_ff, cfg.dtype
+    h, n = n_heads(cfg), cfg.rwkv_head_dim
+    ks = split_keys(key, 12)
+    zeros = lambda *s: jnp.zeros(s, dt)
+    return RWKVLayer(
+        ln1_s=jnp.ones((d,), dt), ln1_b=zeros(d),
+        ln2_s=jnp.ones((d,), dt), ln2_b=zeros(d),
+        mu_x=zeros(d), mu=jnp.full((5, d), 0.5, dt),
+        lora_a=dense_init(ks[0], (d, 5 * TM_LORA), in_axis=0, dtype=dt),
+        lora_b=dense_init(ks[1], (5, TM_LORA, d), in_axis=1, dtype=dt),
+        w0=jnp.full((d,), -6.0, dt),
+        w_a=dense_init(ks[2], (d, DW_LORA), in_axis=0, dtype=dt),
+        w_b=dense_init(ks[3], (DW_LORA, d), in_axis=0, dtype=dt),
+        u=dense_init(ks[4], (h, n), in_axis=1, dtype=dt),
+        wr=dense_init(ks[5], (d, d), in_axis=0, dtype=dt),
+        wk=dense_init(ks[6], (d, d), in_axis=0, dtype=dt),
+        wv=dense_init(ks[7], (d, d), in_axis=0, dtype=dt),
+        wg=dense_init(ks[8], (d, d), in_axis=0, dtype=dt),
+        wo=dense_init(ks[9], (d, d), in_axis=0, dtype=dt),
+        lnx_s=jnp.ones((d,), dt), lnx_b=zeros(d),
+        mu_ck=jnp.full((d,), 0.5, dt), mu_cr=jnp.full((d,), 0.5, dt),
+        wck=dense_init(ks[10], (d, f), in_axis=0, dtype=dt),
+        wcv=dense_init(ks[11], (f, d), in_axis=0, dtype=dt),
+        wcr=dense_init(ks[0], (d, d), in_axis=0, dtype=dt),
+    )
+
+
+def init_rwkv(key, cfg: ArchConfig) -> RWKVParams:
+    kt, kl, kh = jax.random.split(key, 3)
+    layers = jax.vmap(lambda k: init_layer(k, cfg))(
+        jax.random.split(kl, cfg.n_layers))
+    d = cfg.d_model
+    return RWKVParams(
+        embed=embed_init(kt, (cfg.vocab, d), cfg.dtype),
+        ln0_s=jnp.ones((d,), cfg.dtype), ln0_b=jnp.zeros((d,), cfg.dtype),
+        layers=layers,
+        lnf_s=jnp.ones((d,), cfg.dtype), lnf_b=jnp.zeros((d,), cfg.dtype),
+        head=dense_init(kh, (d, cfg.vocab), in_axis=0, dtype=cfg.dtype),
+    )
+
+
+class LayerState(NamedTuple):
+    """Recurrent state of one layer (stacked [L, ...] for the model)."""
+    tm_shift: jax.Array    # [B, D] last token's input to time mix
+    cm_shift: jax.Array    # [B, D] last token's input to channel mix
+    wkv: jax.Array         # [B, H, N, N] fp32 outer-product state
+
+
+def init_state(cfg: ArchConfig, batch: int) -> LayerState:
+    d, h, n = cfg.d_model, n_heads(cfg), cfg.rwkv_head_dim
+    return LayerState(
+        tm_shift=jnp.zeros((cfg.n_layers, batch, d), cfg.dtype),
+        cm_shift=jnp.zeros((cfg.n_layers, batch, d), cfg.dtype),
+        wkv=jnp.zeros((cfg.n_layers, batch, h, n, n), jnp.float32))
+
+
+def _time_mix_step(lp: RWKVLayer, x, prev_x, s, cfg: ArchConfig):
+    """One token of WKV6. x: [B, D]; s: [B, H, N, N] fp32."""
+    h, n = n_heads(cfg), cfg.rwkv_head_dim
+    b, d = x.shape
+    xx = prev_x - x
+    xxx = x + xx * lp.mu_x
+    lo = jnp.tanh(xxx @ lp.lora_a).reshape(b, 5, TM_LORA)
+    dd = jnp.einsum("bft,ftd->fbd", lo, lp.lora_b)       # [5, B, D]
+    mix = x[None] + xx[None] * (lp.mu[:, None, :] + dd)  # [5, B, D]
+    mr, mk, mv, mw, mg = mix
+    r = (mr @ lp.wr).reshape(b, h, n)
+    k = (mk @ lp.wk).reshape(b, h, n)
+    v = (mv @ lp.wv).reshape(b, h, n)
+    g = jax.nn.silu(mg @ lp.wg)
+    w = jnp.exp(-jnp.exp((lp.w0 + jnp.tanh(mw @ lp.w_a) @ lp.w_b)
+                         .astype(jnp.float32))).reshape(b, h, n)
+
+    r32, k32, v32 = (a.astype(jnp.float32) for a in (r, k, v))
+    kv = k32[..., :, None] * v32[..., None, :]           # [B,H,N,N]
+    out = jnp.einsum("bhn,bhnm->bhm",
+                     r32, s + lp.u.astype(jnp.float32)[None, :, :, None]
+                     * kv)
+    s_new = w[..., :, None] * s + kv
+    out = out.reshape(b, d)
+    # per-head group norm
+    oh = out.reshape(b, h, n)
+    mu = oh.mean(-1, keepdims=True)
+    var = oh.var(-1, keepdims=True)
+    oh = (oh - mu) * jax.lax.rsqrt(var + 64e-5)
+    out = oh.reshape(b, d) * lp.lnx_s.astype(jnp.float32) \
+        + lp.lnx_b.astype(jnp.float32)
+    out = (out.astype(cfg.dtype) * g) @ lp.wo
+    return out, s_new
+
+
+def _channel_mix_step(lp: RWKVLayer, x, prev_x):
+    xx = prev_x - x
+    k = x + xx * lp.mu_ck
+    r = x + xx * lp.mu_cr
+    kk = jnp.square(jax.nn.relu(k @ lp.wck))
+    return jax.nn.sigmoid(r @ lp.wcr) * (kk @ lp.wcv)
+
+
+def _layer_step(lp: RWKVLayer, x, st: LayerState, cfg: ArchConfig):
+    """One token through one layer. x: [B, D]."""
+    h1 = layer_norm(x, lp.ln1_s, lp.ln1_b)
+    tm, wkv = _time_mix_step(lp, h1, st.tm_shift, st.wkv, cfg)
+    x = x + tm
+    h2 = layer_norm(x, lp.ln2_s, lp.ln2_b)
+    cm = _channel_mix_step(lp, h2, st.cm_shift)
+    x = x + cm
+    return x, LayerState(tm_shift=h1, cm_shift=h2, wkv=wkv)
+
+
+def _time_mix_seq(lp: RWKVLayer, x: jax.Array, cfg: ArchConfig):
+    """Full-sequence WKV6: weights stream ONCE per layer (layer-major).
+
+    All projections are [B,S,D] matmuls; only the state recurrence scans
+    over time, and its body is weight-free (elementwise [B,H,N,N]) — the
+    formulation real RWKV training uses, and the program the Pallas
+    ``rwkv_scan`` kernel replaces on TPU (state held in VMEM).
+    """
+    b, s, d = x.shape
+    h, n = n_heads(cfg), cfg.rwkv_head_dim
+    xprev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    xx = xprev - x
+    xxx = x + xx * lp.mu_x
+    lo = jnp.tanh(jnp.einsum("bsd,dt->bst", xxx, lp.lora_a)
+                  ).reshape(b, s, 5, TM_LORA)
+    dd = jnp.einsum("bsft,ftd->fbsd", lo, lp.lora_b)      # [5,B,S,D]
+    mix = x[None] + xx[None] * (lp.mu[:, None, None, :] + dd)
+    mr, mk, mv, mw, mg = mix
+    r = jnp.einsum("bsd,de->bse", mr, lp.wr).reshape(b, s, h, n)
+    k = jnp.einsum("bsd,de->bse", mk, lp.wk).reshape(b, s, h, n)
+    v = jnp.einsum("bsd,de->bse", mv, lp.wv).reshape(b, s, h, n)
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", mg, lp.wg))
+    w = jnp.exp(-jnp.exp(
+        (lp.w0 + jnp.tanh(jnp.einsum("bsd,dt->bst", mw, lp.w_a))
+         @ lp.w_b).astype(jnp.float32))).reshape(b, s, h, n)
+
+    r32, k32, v32 = (a.astype(jnp.float32) for a in (r, k, v))
+    u32 = lp.u.astype(jnp.float32)
+
+    def token(sstate, rt, kt, vt, wt):
+        kv = kt[..., :, None] * vt[..., None, :]  # [B,H,N,N]
+        out = jnp.einsum("bhn,bhnm->bhm", rt,
+                         sstate + u32[None, :, :, None] * kv)
+        return wt[..., :, None] * sstate + kv, out
+
+    chunk = cfg.rwkv_chunk
+    if chunk and s % chunk == 0:
+        # chunked recurrence: C token updates per scan step fuse into one
+        # loop body, so the [B,H,N,N] state round-trips HBM once per chunk
+        # instead of once per token (~C x less state traffic)
+        def step(sstate, inp):
+            rs, ks, vs, ws = inp                  # [C,B,H,N]
+            outs = []
+            for t in range(chunk):
+                sstate, o = token(sstate, rs[t], ks[t], vs[t], ws[t])
+                outs.append(o)
+            return sstate, jnp.stack(outs)
+
+        xs = tuple(jnp.moveaxis(a, 1, 0).reshape(
+            s // chunk, chunk, b, h, n)
+            for a in (r32, k32, v32, w.astype(jnp.float32)))
+        s0 = jnp.zeros((b, h, n, n), jnp.float32)
+        _, out = jax.lax.scan(step, s0, xs)
+        out = jnp.moveaxis(out.reshape(s, b, h, n), 0, 1).reshape(b, s, d)
+    else:
+        def step(sstate, inp):
+            return token(sstate, *inp)
+
+        xs = tuple(jnp.moveaxis(a, 1, 0) for a in (r32, k32, v32,
+                                                   w.astype(jnp.float32)))
+        s0 = jnp.zeros((b, h, n, n), jnp.float32)
+        _, out = jax.lax.scan(step, s0, xs)
+        out = jnp.moveaxis(out, 0, 1).reshape(b, s, d)
+    # per-head group norm
+    oh = out.reshape(b, s, h, n)
+    mu = oh.mean(-1, keepdims=True)
+    var = oh.var(-1, keepdims=True)
+    oh = (oh - mu) * jax.lax.rsqrt(var + 64e-5)
+    out = oh.reshape(b, s, d) * lp.lnx_s.astype(jnp.float32) \
+        + lp.lnx_b.astype(jnp.float32)
+    return (out.astype(cfg.dtype) * g) @ lp.wo
+
+
+def _channel_mix_seq(lp: RWKVLayer, x: jax.Array):
+    xprev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    xx = xprev - x
+    k = x + xx * lp.mu_ck
+    r = x + xx * lp.mu_cr
+    kk = jnp.square(jax.nn.relu(jnp.einsum("bsd,df->bsf", k, lp.wck)))
+    return jax.nn.sigmoid(jnp.einsum("bsd,de->bse", r, lp.wcr)) \
+        * jnp.einsum("bsf,fd->bsd", kk, lp.wcv)
+
+
+def _layer_seq(lp: RWKVLayer, x: jax.Array, cfg: ArchConfig):
+    h1 = layer_norm(x, lp.ln1_s, lp.ln1_b)
+    x = x + _time_mix_seq(lp, h1, cfg)
+    h2 = layer_norm(x, lp.ln2_s, lp.ln2_b)
+    x = x + _channel_mix_seq(lp, h2)
+    return x
+
+
+def forward(params: RWKVParams, tokens: jax.Array, cfg: ArchConfig
+            ) -> jax.Array:
+    """Training forward, layer-major: tokens [B,S] -> logits [B,S,V]."""
+    x = params.embed[tokens].astype(cfg.dtype)
+    x = layer_norm(x, params.ln0_s, params.ln0_b)
+
+    fn = jax.checkpoint(lambda c, lp: (_layer_seq(lp, c, cfg), None))
+    if cfg.unroll_layers:
+        for i in range(cfg.n_layers):
+            lp = jax.tree_util.tree_map(lambda a, i=i: a[i], params.layers)
+            x, _ = fn(x, lp)
+    else:
+        x, _ = jax.lax.scan(fn, x, params.layers)
+    y = layer_norm(x, params.lnf_s, params.lnf_b)
+    return jnp.einsum("bsd,dv->bsv", y, params.head.astype(cfg.dtype))
+
+
+def lm_loss(params: RWKVParams, tokens: jax.Array, cfg: ArchConfig):
+    logits = forward(params, tokens, cfg)
+    return cross_entropy(logits[:, :-1], tokens[:, 1:])
+
+
+def decode_step(params: RWKVParams, st: LayerState, token: jax.Array,
+                cfg: ArchConfig):
+    """One serving step: token [B] -> logits [B, V], updated state."""
+    x = params.embed[token].astype(cfg.dtype)
+    x = layer_norm(x, params.ln0_s, params.ln0_b)
+
+    def layer_body(x, inp):
+        lp, lst = inp
+        return _layer_step(lp, x, lst, cfg)
+
+    if cfg.unroll_layers:
+        outs = []
+        for i in range(cfg.n_layers):
+            pick = lambda a, i=i: a[i]
+            inp = jax.tree_util.tree_map(pick, (params.layers, st))
+            x, o = layer_body(x, inp)
+            outs.append(o)
+        y = x
+        new_st = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *outs)
+    else:
+        y, new_st = jax.lax.scan(layer_body, x, (params.layers, st))
+    y = layer_norm(y, params.lnf_s, params.lnf_b)
+    return jnp.einsum("bd,dv->bv", y, params.head.astype(cfg.dtype)), new_st

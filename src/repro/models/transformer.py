@@ -1,0 +1,226 @@
+"""Decoder-only transformer LM (dense + MoE), scan-over-layers.
+
+Backbone for: llama4-scout, qwen2-moe, command-r, deepseek-67b, smollm,
+granite, the InternVL LM, and the Whisper decoder.  Layers are stacked on a
+leading ``L`` axis and driven by ``jax.lax.scan`` — this keeps the HLO small
+(one layer body) which matters for the 80-compile dry-run, and pairs with a
+remat policy for training.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as A
+from repro.models import moe as M
+from repro.models.common import (ArchConfig, cross_entropy, dense_init,
+                                 embed_init, rms_norm, split_keys)
+
+
+class MLPParams(NamedTuple):
+    w_gate: jax.Array     # [D, F]
+    w_up: jax.Array       # [D, F]
+    w_down: jax.Array     # [F, D]
+
+
+def init_mlp(key, d, f, dtype) -> MLPParams:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return MLPParams(
+        w_gate=dense_init(k1, (d, f), in_axis=0, dtype=dtype),
+        w_up=dense_init(k2, (d, f), in_axis=0, dtype=dtype),
+        w_down=dense_init(k3, (f, d), in_axis=0, dtype=dtype))
+
+
+def mlp(params: MLPParams, x: jax.Array) -> jax.Array:
+    h = jnp.einsum("bsd,df->bsf", x, params.w_gate)
+    u = jnp.einsum("bsd,df->bsf", x, params.w_up)
+    return jnp.einsum("bsf,fd->bsd", jax.nn.silu(h) * u, params.w_down)
+
+
+class LayerParams(NamedTuple):
+    ln_attn: jax.Array
+    attn: A.AttnParams
+    ln_mlp: jax.Array
+    mlp: Optional[MLPParams]       # dense layers
+    moe: Optional[M.MoEParams]     # MoE layers (None for dense archs)
+
+
+class LMParams(NamedTuple):
+    embed: jax.Array               # [V, D]
+    layers: LayerParams            # stacked [L, ...]
+    ln_f: jax.Array                # [D]
+    lm_head: Optional[jax.Array]   # [D, V] (None when tied)
+
+
+def init_layer(key, cfg: ArchConfig, dtype=None) -> LayerParams:
+    dtype = dtype or cfg.dtype
+    ks = split_keys(key, 3)
+    d = cfg.d_model
+    return LayerParams(
+        ln_attn=jnp.zeros((d,), dtype),
+        attn=A.init_attn(ks[0], cfg, dtype),
+        ln_mlp=jnp.zeros((d,), dtype),
+        mlp=None if cfg.is_moe else init_mlp(ks[1], d, cfg.d_ff, dtype),
+        moe=M.init_moe(ks[2], cfg, dtype) if cfg.is_moe else None,
+    )
+
+
+def init_lm(key, cfg: ArchConfig) -> LMParams:
+    kt, kl, kh = jax.random.split(key, 3)
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+    layers = jax.vmap(lambda k: init_layer(k, cfg))(layer_keys)
+    return LMParams(
+        embed=embed_init(kt, (cfg.vocab, cfg.d_model), cfg.dtype),
+        layers=layers,
+        ln_f=jnp.zeros((cfg.d_model,), cfg.dtype),
+        lm_head=None if cfg.tie_embeddings else
+        dense_init(kh, (cfg.d_model, cfg.vocab), in_axis=0,
+                   dtype=cfg.dtype),
+    )
+
+
+def _layer_fwd(lp: LayerParams, x: jax.Array, cfg: ArchConfig,
+               pos: Optional[jax.Array]) -> jax.Array:
+    h = rms_norm(x, lp.ln_attn, cfg.norm_eps)
+    x = x + A.attention_train(lp.attn, h, cfg, causal=True, pos=pos)
+    h = rms_norm(x, lp.ln_mlp, cfg.norm_eps)
+    if cfg.is_moe:
+        x = x + M.moe_ffn(lp.moe, h, cfg)
+    else:
+        x = x + mlp(lp.mlp, h)
+    return x
+
+
+def forward(params: LMParams, tokens: jax.Array, cfg: ArchConfig,
+            *, prefix_embed: Optional[jax.Array] = None,
+            remat: bool = True) -> jax.Array:
+    """tokens [B, S] -> logits [B, S(+P), V].
+
+    ``prefix_embed`` prepends precomputed embeddings (the VLM patch stub).
+    """
+    x = params.embed[tokens].astype(cfg.dtype)
+    if prefix_embed is not None:
+        x = jnp.concatenate([prefix_embed.astype(cfg.dtype), x], axis=1)
+    b, s, _ = x.shape
+    pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    fn = (jax.checkpoint(_layer_fwd, static_argnums=(2,)) if remat
+          else _layer_fwd)
+    if cfg.unroll_layers:
+        # exact cost accounting + cross-layer scheduling (see common.py)
+        for i in range(cfg.n_layers):
+            lp = jax.tree_util.tree_map(lambda a, i=i: a[i], params.layers)
+            x = fn(lp, x, cfg, pos)
+    else:
+        x, _ = jax.lax.scan(lambda c, lp: (fn(lp, c, cfg, pos), None),
+                            x, params.layers)
+    x = rms_norm(x, params.ln_f, cfg.norm_eps)
+    head = params.lm_head if params.lm_head is not None else params.embed.T
+    return jnp.einsum("bsd,dv->bsv", x, head.astype(cfg.dtype))
+
+
+def lm_loss(params: LMParams, tokens: jax.Array, cfg: ArchConfig,
+            prefix_embed: Optional[jax.Array] = None) -> jax.Array:
+    logits = forward(params, tokens, cfg, prefix_embed=prefix_embed)
+    if prefix_embed is not None:
+        logits = logits[:, prefix_embed.shape[1]:]
+    return cross_entropy(logits[:, :-1], tokens[:, 1:])
+
+
+# --------------------------------------------------------------------------
+# decode
+# --------------------------------------------------------------------------
+
+class DecodeState(NamedTuple):
+    cache: A.KVCache        # stacked [L, B, S_max, KV, hd]
+    pos: jax.Array          # [] next position to write
+
+
+def init_decode(cfg: ArchConfig, batch: int, s_max: int) -> DecodeState:
+    return DecodeState(
+        cache=A.KVCache.init(cfg, batch, s_max, layers=cfg.n_layers),
+        pos=jnp.int32(0))
+
+
+def decode_step(params: LMParams, state: DecodeState, token: jax.Array,
+                cfg: ArchConfig):
+    """One serving step: token [B] -> logits [B, V], updated state."""
+    x = params.embed[token][:, None, :].astype(cfg.dtype)   # [B,1,D]
+
+    def body(carry, inp):
+        x = carry
+        lp, layer_cache = inp
+        h = rms_norm(x, lp.ln_attn, cfg.norm_eps)
+        a, new_cache = A.attention_decode(lp.attn, h, layer_cache,
+                                          state.pos, cfg)
+        x = x + a
+        h = rms_norm(x, lp.ln_mlp, cfg.norm_eps)
+        if cfg.is_moe:
+            x = x + M.moe_ffn(lp.moe, h, cfg)
+        else:
+            x = x + mlp(lp.mlp, h)
+        return x, new_cache
+
+    if cfg.unroll_layers:
+        caches = []
+        for i in range(cfg.n_layers):
+            pick = lambda a, i=i: a[i]
+            lp = jax.tree_util.tree_map(pick, params.layers)
+            lc = jax.tree_util.tree_map(pick, state.cache)
+            x, nc = body(x, (lp, lc))
+            caches.append(nc)
+        new_cache = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *caches)
+    else:
+        x, new_cache = jax.lax.scan(body, x, (params.layers, state.cache))
+    x = rms_norm(x, params.ln_f, cfg.norm_eps)
+    head = params.lm_head if params.lm_head is not None else params.embed.T
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(cfg.dtype))[:, 0]
+    return logits, DecodeState(cache=new_cache, pos=state.pos + 1)
+
+
+def prefill(params: LMParams, tokens: jax.Array, cfg: ArchConfig,
+            s_max: int) -> tuple[jax.Array, DecodeState]:
+    """Prefill the KV cache with a full prompt; returns last-token logits.
+
+    Implemented as full-sequence attention with K/V written to the cache —
+    one pass, no token loop (this is the `prefill_32k` shape's program).
+    """
+    b, s = tokens.shape
+    x = params.embed[tokens].astype(cfg.dtype)
+    pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    def body(x, lp):
+        h = rms_norm(x, lp.ln_attn, cfg.norm_eps)
+        from repro.models.common import apply_rope
+        q = jnp.einsum("bsd,dhk->bshk", h, lp.attn.wq)
+        k = jnp.einsum("bsd,dhk->bshk", h, lp.attn.wk)
+        v = jnp.einsum("bsd,dhk->bshk", h, lp.attn.wv)
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+        o = A._sdpa_train(q, k, v, causal=True, impl=cfg.attn_impl,
+                          chunk=cfg.attn_chunk)
+        x = x + jnp.einsum("bshk,hkd->bsd", o, lp.attn.wo)
+        h2 = rms_norm(x, lp.ln_mlp, cfg.norm_eps)
+        x = x + (M.moe_ffn(lp.moe, h2, cfg) if cfg.is_moe
+                 else mlp(lp.mlp, h2))
+        pad = s_max - s
+        ck = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cv = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        return x, A.KVCache(k=ck, v=cv)
+
+    if cfg.unroll_layers:
+        caches = []
+        for i in range(cfg.n_layers):
+            lp = jax.tree_util.tree_map(lambda a, i=i: a[i], params.layers)
+            x, lc = body(x, lp)
+            caches.append(lc)
+        cache = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *caches)
+    else:
+        x, cache = jax.lax.scan(body, x, params.layers)
+    x = rms_norm(x, params.ln_f, cfg.norm_eps)
+    head = params.lm_head if params.lm_head is not None else params.embed.T
+    logits = jnp.einsum("bd,dv->bv", x[:, -1], head.astype(cfg.dtype))
+    return logits, DecodeState(cache=cache, pos=jnp.int32(s))

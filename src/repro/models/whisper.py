@@ -1,0 +1,243 @@
+"""Whisper-medium backbone (arXiv:2212.04356): encoder-decoder transformer.
+
+Per the brief, only the transformer backbone is modelled: the conv/mel
+frontend is a stub — ``input_specs()`` supplies precomputed frame embeddings
+[B, n_frames, D].  Encoder: bidirectional self-attention + GELU MLP.
+Decoder: causal self-attention + cross-attention into the encoder output.
+Whisper uses LayerNorm (with bias) and learned positions; MHA (kv == heads).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as A
+from repro.models.common import (ArchConfig, cross_entropy, dense_init,
+                                 embed_init, layer_norm, split_keys)
+
+
+class FFN(NamedTuple):
+    w1: jax.Array
+    b1: jax.Array
+    w2: jax.Array
+    b2: jax.Array
+
+
+class EncLayer(NamedTuple):
+    ln1_s: jax.Array
+    ln1_b: jax.Array
+    attn: A.AttnParams
+    ln2_s: jax.Array
+    ln2_b: jax.Array
+    ffn: FFN
+
+
+class DecLayer(NamedTuple):
+    ln1_s: jax.Array
+    ln1_b: jax.Array
+    self_attn: A.AttnParams
+    ln2_s: jax.Array
+    ln2_b: jax.Array
+    cross_attn: A.AttnParams
+    ln3_s: jax.Array
+    ln3_b: jax.Array
+    ffn: FFN
+
+
+class WhisperParams(NamedTuple):
+    enc_pos: jax.Array        # [n_frames, D] (sinusoidal, fixed init)
+    enc_layers: EncLayer      # stacked
+    enc_lnf_s: jax.Array
+    enc_lnf_b: jax.Array
+    tok_embed: jax.Array      # [V, D]
+    dec_pos: jax.Array        # [max_pos, D] learned
+    dec_layers: DecLayer      # stacked
+    dec_lnf_s: jax.Array
+    dec_lnf_b: jax.Array
+
+
+def _init_ffn(key, d, f, dt) -> FFN:
+    k1, k2 = jax.random.split(key)
+    return FFN(w1=dense_init(k1, (d, f), in_axis=0, dtype=dt),
+               b1=jnp.zeros((f,), dt),
+               w2=dense_init(k2, (f, d), in_axis=0, dtype=dt),
+               b2=jnp.zeros((d,), dt))
+
+
+def _ffn(p: FFN, x):
+    return jnp.einsum("bsf,fd->bsd",
+                      jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, p.w1) + p.b1),
+                      p.w2) + p.b2
+
+
+def _sinusoid(n: int, d: int) -> jnp.ndarray:
+    pos = jnp.arange(n)[:, None].astype(jnp.float32)
+    dim = jnp.arange(d // 2)[None, :].astype(jnp.float32)
+    ang = pos / jnp.power(10000.0, 2 * dim / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def init_whisper(key, cfg: ArchConfig, max_pos: int = 4096) -> WhisperParams:
+    dt = cfg.dtype
+    d = cfg.d_model
+    ks = split_keys(key, 5)
+
+    def enc_layer(k):
+        k1, k2 = jax.random.split(k)
+        z = lambda: jnp.zeros((d,), dt)
+        return EncLayer(ln1_s=jnp.ones((d,), dt), ln1_b=z(),
+                        attn=A.init_attn(k1, cfg),
+                        ln2_s=jnp.ones((d,), dt), ln2_b=z(),
+                        ffn=_init_ffn(k2, d, cfg.d_ff, dt))
+
+    def dec_layer(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        z = lambda: jnp.zeros((d,), dt)
+        return DecLayer(ln1_s=jnp.ones((d,), dt), ln1_b=z(),
+                        self_attn=A.init_attn(k1, cfg),
+                        ln2_s=jnp.ones((d,), dt), ln2_b=z(),
+                        cross_attn=A.init_attn(k2, cfg),
+                        ln3_s=jnp.ones((d,), dt), ln3_b=z(),
+                        ffn=_init_ffn(k3, d, cfg.d_ff, dt))
+
+    n_enc = cfg.n_enc_layers or cfg.n_layers
+    return WhisperParams(
+        enc_pos=_sinusoid(cfg.n_frames, d).astype(dt),
+        enc_layers=jax.vmap(enc_layer)(jax.random.split(ks[0], n_enc)),
+        enc_lnf_s=jnp.ones((d,), dt), enc_lnf_b=jnp.zeros((d,), dt),
+        tok_embed=embed_init(ks[1], (cfg.vocab, d), dt),
+        dec_pos=embed_init(ks[2], (max_pos, d), dt),
+        dec_layers=jax.vmap(dec_layer)(jax.random.split(ks[3],
+                                                        cfg.n_layers)),
+        dec_lnf_s=jnp.ones((d,), dt), dec_lnf_b=jnp.zeros((d,), dt),
+    )
+
+
+def encode(params: WhisperParams, frames: jax.Array, cfg: ArchConfig):
+    """frames: [B, T, D] stubbed frame embeddings -> encoder states."""
+    x = frames.astype(cfg.dtype) + params.enc_pos[None]
+
+    def body(x, lp: EncLayer):
+        h = layer_norm(x, lp.ln1_s, lp.ln1_b)
+        x = x + A.attention_train(lp.attn, h, cfg, causal=False,
+                                  use_rope=False)
+        h = layer_norm(x, lp.ln2_s, lp.ln2_b)
+        x = x + _ffn(lp.ffn, h)
+        return x, None
+
+    fn = jax.checkpoint(body)
+    if cfg.unroll_layers:
+        n = cfg.n_enc_layers or cfg.n_layers
+        for i in range(n):
+            lp = jax.tree_util.tree_map(lambda a, i=i: a[i],
+                                        params.enc_layers)
+            x, _ = fn(x, lp)
+    else:
+        x, _ = jax.lax.scan(fn, x, params.enc_layers)
+    return layer_norm(x, params.enc_lnf_s, params.enc_lnf_b)
+
+
+def decode_train(params: WhisperParams, tokens: jax.Array,
+                 enc_out: jax.Array, cfg: ArchConfig):
+    b, s = tokens.shape
+    x = params.tok_embed[tokens].astype(cfg.dtype) + params.dec_pos[None, :s]
+
+    def body(x, lp: DecLayer):
+        h = layer_norm(x, lp.ln1_s, lp.ln1_b)
+        x = x + A.attention_train(lp.self_attn, h, cfg, causal=True,
+                                  use_rope=False)
+        h = layer_norm(x, lp.ln2_s, lp.ln2_b)
+        x = x + A.cross_attention(lp.cross_attn, h, enc_out, cfg)
+        h = layer_norm(x, lp.ln3_s, lp.ln3_b)
+        x = x + _ffn(lp.ffn, h)
+        return x, None
+
+    fn = jax.checkpoint(body)
+    if cfg.unroll_layers:
+        for i in range(cfg.n_layers):
+            lp = jax.tree_util.tree_map(lambda a, i=i: a[i],
+                                        params.dec_layers)
+            x, _ = fn(x, lp)
+    else:
+        x, _ = jax.lax.scan(fn, x, params.dec_layers)
+    x = layer_norm(x, params.dec_lnf_s, params.dec_lnf_b)
+    return jnp.einsum("bsd,vd->bsv", x, params.tok_embed.astype(cfg.dtype))
+
+
+def loss(params: WhisperParams, frames: jax.Array, tokens: jax.Array,
+         cfg: ArchConfig):
+    enc = encode(params, frames, cfg)
+    logits = decode_train(params, tokens, enc, cfg)
+    return cross_entropy(logits[:, :-1], tokens[:, 1:])
+
+
+class WhisperState(NamedTuple):
+    self_cache: A.KVCache     # [L, B, S_max, KV, hd]
+    cross_k: jax.Array        # [L, B, T, KV, hd] precomputed
+    cross_v: jax.Array
+    pos: jax.Array
+
+
+def init_decode(params: WhisperParams, frames: jax.Array, cfg: ArchConfig,
+                s_max: int) -> WhisperState:
+    """Encode once, precompute cross K/V (the serving fast path)."""
+    enc = encode(params, frames, cfg)
+
+    def cross_kv(lp: DecLayer):
+        k = jnp.einsum("btd,dhk->bthk", enc, lp.cross_attn.wk)
+        v = jnp.einsum("btd,dhk->bthk", enc, lp.cross_attn.wv)
+        return k, v
+
+    ck, cv = jax.vmap(cross_kv)(params.dec_layers)
+    b = frames.shape[0]
+    return WhisperState(
+        self_cache=A.KVCache.init(cfg, b, s_max, layers=cfg.n_layers),
+        cross_k=ck, cross_v=cv, pos=jnp.int32(0))
+
+
+def decode_step(params: WhisperParams, st: WhisperState, token: jax.Array,
+                cfg: ArchConfig):
+    b = token.shape[0]
+    pe = params.dec_pos[jnp.minimum(st.pos, params.dec_pos.shape[0] - 1)]
+    x = (params.tok_embed[token] + pe)[:, None, :].astype(cfg.dtype)
+
+    def body(x, inp):
+        lp, cache, ck, cv = inp
+        h = layer_norm(x, lp.ln1_s, lp.ln1_b)
+        o, cache = A.attention_decode(lp.self_attn, h, cache, st.pos, cfg,
+                                      use_rope=False)
+        x = x + o
+        h = layer_norm(x, lp.ln2_s, lp.ln2_b)
+        q = jnp.einsum("bsd,dhk->bshk", h, lp.cross_attn.wq)
+        qg = A._group_heads(q, ck.shape[2])
+        logits = jnp.einsum("bqkgh,bskh->bkgqs", qg, ck,
+                            preferred_element_type=jnp.float32) \
+            * cfg.hd ** -0.5
+        p = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+        o = jnp.einsum("bkgqs,bskh->bqkgh", p, cv)
+        o = o.reshape(b, 1, cfg.n_heads, cfg.hd)
+        x = x + jnp.einsum("bshk,hkd->bsd", o, lp.cross_attn.wo)
+        h = layer_norm(x, lp.ln3_s, lp.ln3_b)
+        x = x + _ffn(lp.ffn, h)
+        return x, cache
+
+    if cfg.unroll_layers:
+        caches = []
+        for i in range(cfg.n_layers):
+            pick = lambda a, i=i: a[i]
+            inp = jax.tree_util.tree_map(
+                pick, (params.dec_layers, st.self_cache, st.cross_k,
+                       st.cross_v))
+            x, nc = body(x, inp)
+            caches.append(nc)
+        new_cache = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *caches)
+    else:
+        x, new_cache = jax.lax.scan(
+            body, x,
+            (params.dec_layers, st.self_cache, st.cross_k, st.cross_v))
+    x = layer_norm(x[:, 0], params.dec_lnf_s, params.dec_lnf_b)
+    logits = jnp.einsum("bd,vd->bv", x, params.tok_embed.astype(cfg.dtype))
+    return logits, st._replace(self_cache=new_cache, pos=st.pos + 1)

@@ -1,0 +1,218 @@
+"""Sharding rules: DP / TP / EP / SP over the production mesh.
+
+Mesh axes: ``pod`` (inter-pod DP), ``data`` (DP / FSDP / SP), ``model``
+(TP / EP / the index's "mem" axis).  JAX requires sharded dims to divide the
+axis size, so every rule is a *preference list* — the first candidate dim
+divisible by the axis size wins, otherwise the tensor falls back to the next
+scheme (e.g. 40 q-heads can't split 16-way, so attention falls back from
+head-parallel (Megatron column) to d_model-parallel (row) with a psum):
+
+* attention  wq/wk/wv: heads → d_model → head_dim;  wo: heads → d_model
+* MLP        gate/up: d_ff → d_model;  down: d_ff → d_model
+* MoE        experts (EP) → per-expert d_ff (TP-in-expert)
+* embeddings vocab → d_model
+* KV cache   batch over data; head_dim over model (fits 32k caches)
+
+Rules are name-driven over the parameter pytree (NamedTuples/dicts), so the
+same function covers every architecture family.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MODEL = "model"
+DATA = "data"
+POD = "pod"
+
+
+def dp_axes(mesh: Mesh):
+    """Batch/data-parallel axes (includes pod when present)."""
+    return (POD, DATA) if POD in mesh.axis_names else (DATA,)
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def name_tree(tree: Any, prefix: str = "") -> Any:
+    """Same-structure tree of dotted field names (NamedTuple/dict aware)."""
+    if tree is None:
+        return None
+    if hasattr(tree, "_fields"):
+        vals = [name_tree(getattr(tree, f), f"{prefix}{f}.")
+                for f in tree._fields]
+        return type(tree)(*vals)
+    if isinstance(tree, dict):
+        return {k: name_tree(v, f"{prefix}{k}.") for k, v in tree.items()}
+    if isinstance(tree, (list, tuple)):
+        return type(tree)(name_tree(v, f"{prefix}{i}.")
+                          for i, v in enumerate(tree))
+    return prefix.rstrip(".")
+
+
+def _pick(shape: Sequence[int], prefs: Sequence[int], size: int,
+          axis: str = MODEL) -> P:
+    """First preferred dim (negative index) divisible by ``size`` wins."""
+    spec: list = [None] * len(shape)
+    for d in prefs:
+        if len(shape) >= -d and shape[d] % size == 0 and shape[d] >= size:
+            spec[d] = axis
+            return P(*spec)
+    return P(*spec)
+
+
+def param_spec(name: str, shape: Sequence[int], mesh: Mesh) -> P:
+    """TP/EP PartitionSpec for one named parameter."""
+    m = _axis_size(mesh, MODEL)
+    n = name.split(".")[-1]
+    holder = name.split(".")[-2] if "." in name else ""
+
+    if len(shape) == 0:
+        return P()
+    # --- norms / scalars / biases on d_model ---
+    if n.startswith(("ln", "norm")) or n in ("b_a", "b_i", "conv_b", "b2",
+                                             "lam", "mu_x", "mu_ck",
+                                             "mu_cr", "w0", "mu"):
+        return P(*([None] * len(shape)))
+    # --- embeddings / heads ---
+    if n in ("embed", "tok_embed"):
+        return _pick(shape, (-2, -1), m)           # vocab, else d_model
+    if n in ("head", "lm_head"):
+        return _pick(shape, (-1, -2), m)           # vocab, else d_model
+    if n in ("dec_pos", "enc_pos"):
+        return _pick(shape, (-2,), m)
+    # --- attention ---
+    if n in ("wq", "wk", "wv") and holder in ("attn", "self_attn",
+                                              "cross_attn", ""):
+        return _pick(shape, (-2, -3, -1), m)       # heads, d_model, hd
+    if n == "wo" and holder in ("attn", "self_attn", "cross_attn", ""):
+        return _pick(shape, (-3, -1), m)           # heads, else d_model out
+    # --- MoE (4D expert-stacked) / dense MLP ---
+    if n in ("w_gate", "w_up"):
+        if len(shape) >= 4 or holder == "moe":
+            return _pick(shape, (-3, -1, -2), m)   # E, F, D
+        return _pick(shape, (-1, -2), m)           # F, else D
+    if n == "w_down":
+        if len(shape) >= 4 or holder == "moe":
+            return _pick(shape, (-3, -2, -1), m)   # E, F, D
+        return _pick(shape, (-2, -1), m)
+    if n == "router":
+        return P(*([None] * len(shape)))
+    if n in ("shared_gate", "shared_up"):
+        return _pick(shape, (-1, -2), m)
+    if n == "shared_down":
+        return _pick(shape, (-2, -1), m)
+    # --- whisper FFN ---
+    if n == "w1":
+        return _pick(shape, (-1, -2), m)
+    if n == "w2":
+        return _pick(shape, (-2, -1), m)
+    if n == "b1":
+        return _pick(shape, (-1,), m)
+    # --- rwkv ---
+    if n in ("wr", "wk", "wv", "wg", "wck", "wcr", "lora_a", "w_a"):
+        return _pick(shape, (-1,), m)          # column-parallel (heads)
+    if n in ("wo", "wcv"):
+        # row-parallel pair of the column-parallel projections above: one
+        # psum per mix block instead of per-projection [B,S,D] all-gathers
+        return _pick(shape, (-2, -1), m)
+    if n in ("w_b", "lora_b"):
+        return _pick(shape, (-1, -2), m)
+    if n == "u":
+        return _pick(shape, (-2,), m)
+    # --- rg-lru ---
+    if n in ("w_x", "w_y"):
+        return _pick(shape, (-1, -2), m)
+    if n == "conv_w":
+        return _pick(shape, (-1,), m)
+    if n == "w_i":
+        return _pick(shape, (-1,), m)
+    if n == "w_o":
+        return _pick(shape, (-2, -1), m)
+    # --- fallback: last dim if divisible ---
+    return _pick(shape, (-1, -2), m)
+
+
+def params_pspecs(params: Any, mesh: Mesh) -> Any:
+    names = name_tree(params)
+    return jax.tree_util.tree_map(
+        lambda nm, p: param_spec(nm, np.shape(p), mesh), names, params)
+
+
+def params_shardings(params: Any, mesh: Mesh) -> Any:
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s),
+                                  params_pspecs(params, mesh))
+
+
+# --------------------------------------------------------------------------
+# activations / batches / decode state
+# --------------------------------------------------------------------------
+
+def batch_pspecs(batch: dict, mesh: Mesh) -> dict:
+    """tokens [B,S] + stub embeddings sharded over the DP axes."""
+    dp = dp_axes(mesh)
+    dsize = int(np.prod([mesh.shape[a] for a in dp]))
+
+    def spec(x):
+        shape = np.shape(x)
+        if shape and shape[0] % dsize == 0 and shape[0] >= dsize:
+            return P(dp, *([None] * (len(shape) - 1)))
+        return P(*([None] * len(shape)))
+
+    return {k: spec(v) for k, v in batch.items()}
+
+
+def state_spec(name: str, shape: Sequence[int], mesh: Mesh) -> P:
+    """Decode-state sharding: batch over data, sequence over model.
+
+    KV caches ([L,B,S,KV,hd]) shard the *sequence* dim over model —
+    attention then reduces only softmax statistics and a tiny partial
+    output across shards (sequence-parallel decode).  Sharding hd instead
+    makes GSPMD all-gather the whole cache per layer ("involuntary full
+    rematerialization") — measured in EXPERIMENTS.md §Perf.  Recurrent
+    states ([L,B,H,N,N], [L,B,W,R], [L,B,R]) shard their widest inner dim.
+    """
+    d = _axis_size(mesh, DATA)
+    m = _axis_size(mesh, MODEL)
+    spec: list = [None] * len(shape)
+    if len(shape) == 0:
+        return P()
+    # find a batch-like dim: the first dim (or second when stacked by layer)
+    for bdim in (1, 0):
+        if len(shape) > bdim and shape[bdim] % d == 0 and shape[bdim] >= d:
+            spec[bdim] = DATA
+            break
+    # model axis: sequence dim (index 2) of stacked caches first, then the
+    # innermost dims
+    cands = (2, -1, -2) if len(shape) >= 4 else (-1, -2)
+    for mdim in cands:
+        i = mdim if mdim >= 0 else len(shape) + mdim
+        if 0 <= i < len(shape) and shape[i] % m == 0 and shape[i] >= m \
+                and spec[i] is None:
+            spec[i] = MODEL
+            break
+    return P(*spec)
+
+
+def decode_state_pspecs(state: Any, mesh: Mesh) -> Any:
+    names = name_tree(state)
+    return jax.tree_util.tree_map(
+        lambda nm, x: state_spec(nm, np.shape(x), mesh), names, state)
+
+
+def describe(params: Any, mesh: Mesh, max_rows: int = 0) -> str:
+    """Human-readable sharding table (README/EXPERIMENTS material)."""
+    names = jax.tree_util.tree_leaves(name_tree(params))
+    leaves = jax.tree_util.tree_leaves(params)
+    specs = jax.tree_util.tree_leaves(
+        params_pspecs(params, mesh), is_leaf=lambda x: isinstance(x, P))
+    rows = []
+    for nm, lf, sp in zip(names, leaves, specs):
+        rows.append(f"{nm:48s} {str(np.shape(lf)):24s} {sp}")
+    if max_rows:
+        rows = rows[:max_rows]
+    return "\n".join(rows)

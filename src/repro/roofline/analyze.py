@@ -1,0 +1,110 @@
+"""Roofline extraction from a compiled dry-run artifact.
+
+Three terms per (arch × shape × mesh), all in seconds (lower bound):
+
+* compute    = HLO_FLOPs(per device) / peak_FLOP/s
+* memory     = HLO_bytes(per device) / HBM_bw
+* collective = collective_bytes(per device) / ICI link bw
+
+``cost_analysis`` reports the SPMD-partitioned (= per-device) module.
+Collective bytes are NOT in cost_analysis, so we parse the optimized HLO and
+sum transfer sizes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute (max of operand/result shape — an upper
+bound on the per-device transfer).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+PEAK_FLOPS_BF16 = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute", "collective-broadcast")
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"=\s+[a-z0-9]+\[[0-9,]*\][^=]*?\b(" + "|".join(COLLECTIVES)
+    + r")(?:-start|-done)?\(")
+_TUPLE_OP_RE = re.compile(
+    r"=\s+\([^)]*\)[^=]*?\b(" + "|".join(COLLECTIVES)
+    + r")(?:-start|-done)?\(")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum per-op-kind transfer bytes over the (per-device) HLO module."""
+    out: dict[str, float] = {k: 0.0 for k in COLLECTIVES}
+    counts: dict[str, int] = {k: 0 for k in COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line) or _TUPLE_OP_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(1)
+        if f" {kind}-done(" in line or f"{kind}-done(" in line:
+            continue  # count start/done pairs once (the -start carries data)
+        sizes = [_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(line)]
+        if not sizes:
+            continue
+        out[kind] += max(sizes)
+        counts[kind] += 1
+    total = sum(out.values())
+    return dict(per_kind=out, counts=counts, total=total)
+
+
+def roofline(flops: float, bytes_accessed: float, coll_bytes: float,
+             peak=PEAK_FLOPS_BF16, hbm=HBM_BW, ici=ICI_BW) -> dict:
+    compute_s = flops / peak
+    memory_s = bytes_accessed / hbm
+    collective_s = coll_bytes / ici
+    terms = dict(compute_s=compute_s, memory_s=memory_s,
+                 collective_s=collective_s)
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    useful = max(compute_s, 1e-30)
+    return dict(**terms, dominant=dominant, bound_s=bound,
+                roofline_fraction=useful / bound if bound else 0.0)
+
+
+def analyze_compiled(compiled: Any) -> dict:
+    """Full extraction from a jax compiled object."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):       # older jax returns [dict]
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    bytes_accessed = float(ca.get("bytes accessed", 0.0))
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        for f in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "alias_size_in_bytes",
+                  "generated_code_size_in_bytes"):
+            mem[f] = getattr(ma, f, None)
+    except Exception as e:              # pragma: no cover
+        mem["error"] = str(e)
+    rl = roofline(flops, bytes_accessed, coll["total"])
+    return dict(flops=flops, bytes_accessed=bytes_accessed,
+                collectives=coll, memory=mem, roofline=rl)
+
+
+def model_flops(n_params_active: float, tokens: float,
+                training: bool) -> float:
+    """6ND for training, 2ND for inference forward."""
+    return (6.0 if training else 2.0) * n_params_active * tokens

@@ -1,0 +1,100 @@
+"""Sherman core: bulkload, traversal, lookup, range, version protocol."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ShermanIndex, TreeConfig, OracleIndex
+from repro.core import ops as O
+from repro.core.tree import EMPTY_KEY, bulkload
+
+CFG = TreeConfig(n_ms=2, nodes_per_ms=512, fanout=8, n_locks_per_ms=1024,
+                 max_height=6, n_cs=2)
+
+
+def make_index(n=300, seed=0):
+    rng = np.random.default_rng(seed)
+    keys = rng.choice(100_000, size=n, replace=False)
+    vals = rng.integers(0, 1 << 20, size=n)
+    idx = ShermanIndex.build(CFG, keys, vals)
+    oracle = OracleIndex()
+    oracle.insert_batch(keys, vals)
+    return idx, oracle
+
+
+def test_bulkload_structure():
+    idx, _ = make_index()
+    st = idx.state
+    assert int(st.height) >= 2
+    root_level = int(st.level[st.root])
+    assert root_level == int(st.height) - 1
+    # leaves chain left-to-right with increasing fences
+    leaves = np.nonzero(np.asarray(st.level) == 0)[0]
+    assert len(leaves) > 1
+
+
+def test_lookup_hits_and_misses():
+    idx, oracle = make_index()
+    present = np.asarray([k for k, _ in oracle.items()[:64]])
+    absent = np.asarray([100_001, 200_000, 300_000])
+    v, f = idx.lookup(np.concatenate([present, absent]))
+    assert f[:64].all() and not f[64:].any()
+    for k, vv in zip(present, v[:64]):
+        assert oracle.lookup(int(k)) == vv
+
+
+def test_range_matches_oracle():
+    idx, oracle = make_index()
+    lo = np.asarray([0, 1_000, 50_000, 99_999])
+    rk, rv, rn = idx.range(lo, count=10, max_leaves=40)
+    for i, l in enumerate(lo):
+        want = oracle.range(int(l), 10)
+        got = [(int(a), int(b)) for a, b in zip(rk[i][:rn[i]],
+                                                rv[i][:rn[i]])]
+        assert got == want
+
+
+def test_torn_read_detected_by_node_version():
+    """Fig. 9: mismatched FNV/RNV must force a retry."""
+    idx, oracle = make_index()
+    k = oracle.items()[0][0]
+    tr = O.traverse(CFG, idx.state, jnp.asarray([k], jnp.int32))
+    leaf = int(tr.leaf[0])
+    st = idx.state._replace(fnv=idx.state.fnv.at[leaf].add(1))  # torn image
+    res = O.leaf_lookup(st, jnp.asarray([leaf]), jnp.asarray([k]))
+    assert not bool(res.consistent[0])
+    assert not bool(res.found[0])
+
+
+def test_torn_entry_detected_by_entry_version():
+    """Entry-level FEV/REV mismatch invalidates only that entry."""
+    idx, oracle = make_index()
+    k = oracle.items()[0][0]
+    tr = O.traverse(CFG, idx.state, jnp.asarray([k], jnp.int32))
+    leaf = int(tr.leaf[0])
+    slot = int(np.nonzero(np.asarray(idx.state.keys[leaf]) == k)[0][0])
+    st = idx.state._replace(fev=idx.state.fev.at[leaf, slot].add(1))
+    res = O.leaf_lookup(st, jnp.asarray([leaf]), jnp.asarray([k]))
+    assert not bool(res.consistent[0])
+    # a different key in the same leaf is still readable
+    others = [kk for kk in np.asarray(idx.state.keys[leaf])
+              if kk != EMPTY_KEY and kk != k]
+    if others:
+        res2 = O.leaf_lookup(st, jnp.asarray([leaf]),
+                             jnp.asarray([others[0]], jnp.int32))
+        assert bool(res2.consistent[0])
+
+
+def test_free_bit_invalidates_node():
+    idx, oracle = make_index()
+    k = oracle.items()[0][0]
+    tr = O.traverse(CFG, idx.state, jnp.asarray([k], jnp.int32))
+    leaf = int(tr.leaf[0])
+    st = idx.state._replace(
+        free_bit=idx.state.free_bit.at[leaf].set(True))
+    res = O.leaf_lookup(st, jnp.asarray([leaf]), jnp.asarray([k]))
+    assert not bool(res.consistent[0])
+
+
+def test_bulkload_rejects_duplicates():
+    with pytest.raises(ValueError):
+        bulkload(CFG, np.asarray([1, 1, 2]), np.asarray([1, 2, 3]))

@@ -1,0 +1,106 @@
+"""Sherman write path: inserts, updates, deletes, splits, repairs."""
+import numpy as np
+import pytest
+
+from repro.core import ShermanIndex, TreeConfig, OracleIndex
+
+CFG = TreeConfig(n_ms=2, nodes_per_ms=512, fanout=8, n_locks_per_ms=1024,
+                 max_height=6, n_cs=2)
+
+
+def fresh(n=200, seed=1):
+    rng = np.random.default_rng(seed)
+    keys = rng.choice(50_000, size=n, replace=False)
+    vals = rng.integers(0, 1 << 20, size=n)
+    idx = ShermanIndex.build(CFG, keys, vals)
+    oracle = OracleIndex()
+    oracle.insert_batch(keys, vals)
+    return idx, oracle, rng
+
+
+def check_all(idx, oracle):
+    items = oracle.items()
+    if not items:
+        return
+    keys = np.asarray([k for k, _ in items])
+    want = np.asarray([v for _, v in items])
+    got, found = idx.lookup(keys)
+    assert found.all(), f"missing {keys[~found][:10]}"
+    assert (got == want).all()
+
+
+def test_update_existing_keys():
+    idx, oracle, rng = fresh()
+    keys = np.asarray([k for k, _ in oracle.items()[:32]])
+    vals = rng.integers(0, 100, size=32)
+    idx.insert(keys, vals)
+    oracle.insert_batch(keys, vals)
+    check_all(idx, oracle)
+
+
+def test_inserts_cause_splits_and_stay_consistent():
+    idx, oracle, rng = fresh()
+    for _ in range(8):
+        ks = rng.integers(0, 50_000, size=96)
+        vs = rng.integers(0, 1 << 20, size=96)
+        idx.insert(ks, vs)
+        oracle.insert_batch(ks, vs)
+    assert idx.counters["leaf_splits"] > 0
+    check_all(idx, oracle)
+
+
+def test_root_split_grows_height():
+    cfg = TreeConfig(n_ms=2, nodes_per_ms=512, fanout=4,
+                     n_locks_per_ms=512, max_height=8, n_cs=2)
+    idx = ShermanIndex.build(cfg, np.asarray([10]), np.asarray([1]))
+    oracle = OracleIndex()
+    oracle.insert(10, 1)
+    h0 = int(idx.state.height)
+    rng = np.random.default_rng(3)
+    for _ in range(12):
+        ks = rng.choice(10_000, size=32, replace=False)
+        vs = ks * 2
+        idx.insert(ks, vs)
+        oracle.insert_batch(ks, vs)
+    assert int(idx.state.height) > h0
+    assert idx.counters["root_splits"] >= 1
+    check_all(idx, oracle)
+
+
+def test_delete_then_reinsert():
+    idx, oracle, rng = fresh()
+    keys = np.asarray([k for k, _ in oracle.items()[:24]])
+    idx.delete(keys)
+    oracle.delete_batch(keys)
+    _, found = idx.lookup(keys)
+    assert not found.any()
+    idx.insert(keys, keys * 3)
+    oracle.insert_batch(keys, keys * 3)
+    check_all(idx, oracle)
+
+
+def test_intra_batch_last_op_wins():
+    idx, oracle, _ = fresh()
+    k = oracle.items()[0][0]
+    # same key three times in one batch: last lane's value sticks
+    idx.insert(np.asarray([k, k, k]), np.asarray([1, 2, 3]))
+    v, f = idx.lookup(np.asarray([k]))
+    assert f[0] and v[0] == 3
+
+
+def test_duplicate_new_key_insert_once():
+    idx, oracle, _ = fresh()
+    idx.insert(np.asarray([77_777] * 5), np.arange(5))
+    v, f = idx.lookup(np.asarray([77_777]))
+    assert f[0] and v[0] == 4
+    # no duplicate entries: delete once removes it completely
+    idx.delete(np.asarray([77_777]))
+    _, f = idx.lookup(np.asarray([77_777]))
+    assert not f[0]
+
+
+def test_handover_counted_under_contention():
+    idx, _, rng = fresh()
+    hot = np.full(64, 4_242)
+    idx.insert(hot, np.arange(64))
+    assert idx.counters["handovers"] > 0

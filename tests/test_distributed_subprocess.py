@@ -1,0 +1,92 @@
+"""Multi-device tests in a subprocess (XLA_FLAGS must precede jax import).
+
+Covers: routed shard_map lookup, pjit write phase on the sharded pool,
+sharded train step, and elastic re-meshing after a simulated device loss.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import ShermanIndex, TreeConfig
+from repro.core import sharded as S
+from repro.core.write import RepairQueue
+
+cfg = TreeConfig(n_ms=4, nodes_per_ms=256, fanout=8, n_locks_per_ms=512,
+                 max_height=6, n_cs=2)
+rng = np.random.default_rng(1)
+keys = rng.choice(50_000, size=400, replace=False)
+vals = rng.integers(0, 1 << 20, size=400)
+idx = ShermanIndex.build(cfg, keys, vals)
+
+mesh = jax.make_mesh((2, 4), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+st = S.shard_tree(idx.state, mesh, cfg)
+cache = S.build_cache(cfg, idx.state, depth=3)
+fn = S.routed_lookup_fn(cfg, mesh, depth=3)
+q = jnp.asarray(keys[:64], jnp.int32)
+with mesh:
+    r = fn(st, cache, q)
+assert np.asarray(r.found).all()
+assert (np.asarray(r.value) == vals[:64]).all()
+print("routed-lookup-ok")
+
+wp = S.pjit_phase_fns(cfg, mesh)
+b = 64
+wk = jnp.asarray(rng.integers(0, 50_000, size=b), jnp.int32)
+wv = jnp.asarray(rng.integers(0, 100, size=b), jnp.int32)
+with mesh:
+    st2, done, stats, rq = wp(st, wk, wv, jnp.zeros(b, bool),
+                              jnp.ones(b, bool), jnp.zeros(b, jnp.int32),
+                              RepairQueue.empty(b))
+assert bool(done.all())
+print("pjit-write-ok")
+
+# sharded train step + elastic reshard
+from repro.configs import get_reduced
+from repro.models.registry import build, make_batch
+from repro.launch.train import shard_train_fns
+from repro.launch import elastic
+from repro.optim import adamw
+
+api = build(get_reduced("smollm-135m"))
+params = api.init(jax.random.PRNGKey(0))
+opt = adamw.init(params)
+batch = make_batch(api.cfg, batch=4, seq=16)
+step, _ = shard_train_fns(api, mesh, params, opt, batch,
+                          adamw.AdamWConfig(warmup_steps=1, total_steps=5))
+p = jax.device_put(params)
+params2, opt2, m = step(params, opt, batch)
+assert np.isfinite(float(m["loss"]))
+print("sharded-train-ok")
+
+mesh2 = elastic.drop_devices(mesh, 4)          # lose half the fleet
+assert int(np.prod(list(mesh2.shape.values()))) == 4
+params3 = elastic.reshard_params(params2, mesh2)
+step2, _ = shard_train_fns(api, mesh2, params3,
+                           jax.device_get(opt2), batch,
+                           adamw.AdamWConfig(warmup_steps=1, total_steps=5))
+opt3 = jax.device_get(opt2)
+params4, opt4, m2 = step2(params3, opt3, batch)
+assert np.isfinite(float(m2["loss"]))
+print("elastic-ok")
+"""
+
+
+@pytest.mark.slow
+def test_distributed_all():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    for marker in ("routed-lookup-ok", "pjit-write-ok",
+                   "sharded-train-ok", "elastic-ok"):
+        assert marker in out.stdout, (marker, out.stdout, out.stderr[-1500:])

@@ -1,0 +1,79 @@
+"""HOCL conflict-group decomposition invariants."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import hocl
+from repro.core.tree import TreeConfig
+
+CFG = TreeConfig(n_ms=2, nodes_per_ms=64, fanout=4, n_locks_per_ms=64,
+                 max_height=4, n_cs=4, handover_max=4)
+
+
+def groups_of(nodes, cs, active=None):
+    nodes = jnp.asarray(nodes, jnp.int32)
+    cs = jnp.asarray(cs, jnp.int32)
+    act = jnp.ones(nodes.shape, bool) if active is None else \
+        jnp.asarray(active)
+    return hocl.group_by_node(CFG, nodes, cs, act)
+
+
+def test_single_group_ranks():
+    g = groups_of([5, 5, 5, 5], [0, 0, 0, 0])
+    assert list(np.asarray(g.local_rank)) == [0, 1, 2, 3]
+    assert list(np.asarray(g.local_size)) == [4, 4, 4, 4]
+    assert int(g.n_node_groups) == 1 and int(g.n_local_groups) == 1
+    # 4 ops, MAX_DEPTH=4 handovers per cycle => 1 remote lock cycle
+    assert list(np.asarray(g.lock_cycles)) == [1, 1, 1, 1]
+
+
+def test_handover_depth_cap():
+    g = groups_of([7] * 11, [0] * 11)
+    # 11 ops = ceil(11/5) = 3 lock cycles (paper MAX_DEPTH=4)
+    assert int(g.lock_cycles[0]) == 3
+
+
+def test_cross_cs_serialization_rank():
+    g = groups_of([9, 9, 9, 9], [0, 0, 1, 1])
+    cs_rank = np.asarray(g.cs_rank)
+    assert cs_rank[0] == 0 and cs_rank[1] == 0
+    assert cs_rank[2] == 1 and cs_rank[3] == 1
+    assert list(np.asarray(g.n_cs_on_node)) == [2, 2, 2, 2]
+
+
+def test_inactive_lanes_excluded():
+    g = groups_of([3, 3, 3], [0, 0, 0], active=[True, False, True])
+    assert int(g.n_node_groups) == 1
+    sizes = np.asarray(g.local_size)
+    assert sizes[0] == 2 and sizes[2] == 2
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 20), st.integers(0, 3)),
+                min_size=1, max_size=64))
+def test_group_invariants(ops):
+    nodes = [n for n, _ in ops]
+    cs = [c for _, c in ops]
+    g = groups_of(nodes, cs)
+    node_rank = np.asarray(g.node_rank)
+    node_size = np.asarray(g.node_size)
+    local_rank = np.asarray(g.local_rank)
+    local_size = np.asarray(g.local_size)
+    arr = np.asarray(nodes)
+    csarr = np.asarray(cs)
+    for nid in set(nodes):
+        lanes = np.nonzero(arr == nid)[0]
+        # node group sizes consistent; ranks form a permutation
+        assert (node_size[lanes] == len(lanes)).all()
+        assert sorted(node_rank[lanes]) == list(range(len(lanes)))
+        # FIFO within each (node, cs) local queue (node ordering is by CS)
+        for c in set(csarr[lanes]):
+            ll = lanes[csarr[lanes] == c]
+            assert (np.diff(node_rank[ll]) > 0).all()
+            assert (np.diff(local_rank[ll]) == 1).all()
+    # local ranks below local sizes
+    assert (local_rank < local_size).all()
+    # handover accounting: cycles = ceil(k / (depth+1))
+    k = local_size
+    assert (np.asarray(g.lock_cycles) ==
+            (k + CFG.handover_max) // (CFG.handover_max + 1)).all()

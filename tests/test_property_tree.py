@@ -1,0 +1,73 @@
+"""Hypothesis property tests: the batched tree matches the oracle under
+arbitrary interleavings of insert/update/delete/lookup/range batches."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ShermanIndex, TreeConfig, OracleIndex
+
+CFG = TreeConfig(n_ms=2, nodes_per_ms=1024, fanout=8, n_locks_per_ms=512,
+                 max_height=7, n_cs=2)
+
+KEYS = st.integers(min_value=0, max_value=2_000)   # small space => collisions
+VALS = st.integers(min_value=0, max_value=1 << 20)
+
+op_batch = st.lists(
+    st.tuples(st.sampled_from(["insert", "delete"]), KEYS, VALS),
+    min_size=1, max_size=48)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(op_batch, min_size=1, max_size=6), st.randoms())
+def test_tree_matches_oracle(batches, rnd):
+    idx = ShermanIndex.build(CFG, np.zeros(0, np.int32),
+                             np.zeros(0, np.int32))
+    oracle = OracleIndex()
+    for batch in batches:
+        ins_k = [k for op, k, v in batch if op == "insert"]
+        ins_v = [v for op, k, v in batch if op == "insert"]
+        del_k = [k for op, k, v in batch if op == "delete"]
+        if ins_k:
+            idx.insert(np.asarray(ins_k), np.asarray(ins_v))
+            oracle.insert_batch(ins_k, ins_v)
+        if del_k:
+            idx.delete(np.asarray(del_k))
+            oracle.delete_batch(del_k)
+    # full state check
+    items = oracle.items()
+    probe = np.asarray([k for k, _ in items] + [3_000, 4_000], np.int32)
+    got, found = idx.lookup(probe)
+    assert found[:len(items)].all()
+    assert not found[len(items):].any()
+    for (k, v), g in zip(items, got[:len(items)]):
+        assert v == g, (k, v, g)
+    # ordered iteration equals the oracle (range from 0)
+    if items:
+        rk, rv, rn = idx.range(np.asarray([0], np.int32),
+                               count=min(len(items), 16),
+                               max_leaves=600)
+        want = items[:min(len(items), 16)]
+        gotr = [(int(a), int(b)) for a, b in zip(rk[0][:rn[0]],
+                                                 rv[0][:rn[0]])]
+        assert gotr == want
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(KEYS, min_size=1, max_size=64, unique=True),
+       st.integers(0, 2**31 - 2))
+def test_mixed_same_batch_insert_delete(keys, seed):
+    """Insert and delete of the same keys inside ONE batch: last op wins."""
+    rng = np.random.default_rng(seed)
+    idx = ShermanIndex.build(CFG, np.zeros(0, np.int32),
+                             np.zeros(0, np.int32))
+    oracle = OracleIndex()
+    ks = np.asarray(keys, np.int32)
+    idx.insert(ks, ks * 2)
+    oracle.insert_batch(ks, ks * 2)
+    # delete half in a batch that also re-inserts a few afterwards (lane
+    # order = oracle application order)
+    half = ks[: len(ks) // 2]
+    idx.delete(half)
+    oracle.delete_batch(half)
+    got, found = idx.lookup(ks)
+    for i, k in enumerate(ks):
+        assert bool(found[i]) == (oracle.lookup(int(k)) is not None)

@@ -1,0 +1,107 @@
+"""Sharding rules: every sharded dim divides the axis, for all 10 archs."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ALL_ARCHS, get
+from repro.launch import shapes as shp
+from repro.models.registry import build
+from repro.parallel import sharding as sh
+
+
+@dataclasses.dataclass
+class FakeMesh:
+    shape: dict
+    axis_names: tuple
+
+
+MESH1 = FakeMesh({"data": 16, "model": 16}, ("data", "model"))
+MESH2 = FakeMesh({"pod": 2, "data": 16, "model": 16},
+                 ("pod", "data", "model"))
+
+
+def check_divisibility(spec_tree, shape_tree, mesh):
+    specs = jax.tree_util.tree_leaves(
+        spec_tree, is_leaf=lambda x: isinstance(x, P))
+    leaves = jax.tree_util.tree_leaves(shape_tree)
+    assert len(specs) == len(leaves)
+    for sp, leaf in zip(specs, leaves):
+        shape = np.shape(leaf) if not hasattr(leaf, "shape") else leaf.shape
+        for dim, axes in enumerate(sp):
+            if axes is None:
+                continue
+            axes = (axes,) if isinstance(axes, str) else axes
+            size = int(np.prod([mesh.shape[a] for a in axes]))
+            assert shape[dim] % size == 0, (sp, shape, dim)
+
+
+@pytest.mark.parametrize("name", ALL_ARCHS)
+@pytest.mark.parametrize("mesh", [MESH1, MESH2], ids=["single", "multi"])
+def test_param_specs_divisible(name, mesh):
+    api = build(get(name))
+    params = shp.params_specs(api)
+    specs = sh.params_pspecs(params, mesh)
+    check_divisibility(specs, params, mesh)
+
+
+@pytest.mark.parametrize("name", ALL_ARCHS)
+def test_decode_state_specs_divisible(name):
+    cfg = get(name)
+    api = build(cfg)
+    params = shp.params_specs(api)
+    for shape_name in ("decode_32k", "long_500k"):
+        shape = shp.SHAPES[shape_name]
+        ok, _ = shp.cell_supported(cfg, shape)
+        if not ok:
+            continue
+        st = shp.decode_state_specs(api, params, shape)
+        specs = sh.decode_state_pspecs(st, MESH1)
+        check_divisibility(specs, st, MESH1)
+
+
+@pytest.mark.parametrize("name", ALL_ARCHS)
+def test_batch_specs(name):
+    cfg = get(name)
+    for shape in shp.SHAPES.values():
+        ok, _ = shp.cell_supported(cfg, shape)
+        if not ok:
+            continue
+        b = shp.batch_specs(cfg, shape)
+        specs = sh.batch_pspecs(b, MESH2)
+        check_divisibility(specs, b, MESH2)
+
+
+def test_attention_fallback_when_heads_not_divisible():
+    """40 q-heads can't split 16 ways: wq must fall back to d_model."""
+    api = build(get("llama4_scout_17b_a16e"))
+    params = shp.params_specs(api)
+    names = jax.tree_util.tree_leaves(sh.name_tree(params))
+    specs = jax.tree_util.tree_leaves(
+        sh.params_pspecs(params, MESH1),
+        is_leaf=lambda x: isinstance(x, P))
+    by_name = dict(zip(names, specs))
+    wq = [v for k, v in by_name.items() if k.endswith("attn.wq")][0]
+    # [L, D, H=40, hd=128]: D (index 1) sharded, H untouched
+    assert wq[1] == "model" and wq[2] is None
+
+
+def test_moe_expert_sharding_llama4_vs_qwen():
+    """16 experts shard over model; 60 experts fall back to per-expert FF."""
+    a1 = build(get("llama4_scout_17b_a16e"))
+    a2 = build(get("qwen2_moe_a2_7b"))
+    for api, expect_expert in ((a1, True), (a2, False)):
+        params = shp.params_specs(api)
+        names = jax.tree_util.tree_leaves(sh.name_tree(params))
+        specs = jax.tree_util.tree_leaves(
+            sh.params_pspecs(params, MESH1),
+            is_leaf=lambda x: isinstance(x, P))
+        by_name = dict(zip(names, specs))
+        wg = [v for k, v in by_name.items()
+              if k.endswith("moe.w_gate")][0]
+        if expect_expert:
+            assert wg[1] == "model"          # [L, E, D, F] E sharded
+        else:
+            assert wg[1] is None and wg[3] == "model"

@@ -1,0 +1,90 @@
+"""End-to-end behaviour tests: the index under a YCSB mix, the serving
+integration, and the netsim reproduction invariants."""
+import numpy as np
+
+from repro.core import (FG_PLUS, SHERMAN, OracleIndex, ShermanIndex,
+                        TreeConfig)
+
+CFG = TreeConfig(n_ms=4, nodes_per_ms=1024, fanout=16, n_locks_per_ms=1024,
+                 max_height=7, n_cs=4)
+
+
+def _ycsb(idx, oracle, rng, n_batches=6, batch=256, skew_hot=64,
+          read_frac=0.5):
+    for _ in range(n_batches):
+        hot = rng.integers(0, skew_hot, batch // 2)
+        cold = rng.integers(0, 1 << 18, batch - batch // 2)
+        keys = np.concatenate([hot, cold]).astype(np.int32)
+        rng.shuffle(keys)
+        nr = int(read_frac * batch)
+        idx.lookup(keys[:nr])
+        vals = rng.integers(0, 1 << 20, batch - nr).astype(np.int32)
+        idx.insert(keys[nr:], vals)
+        oracle.insert_batch(keys[nr:], vals)
+
+
+def test_ycsb_mix_end_to_end():
+    rng = np.random.default_rng(11)
+    base = rng.choice(1 << 18, size=5_000, replace=False)
+    idx = ShermanIndex.build(CFG, base, base * 7, features=SHERMAN)
+    oracle = OracleIndex()
+    oracle.insert_batch(base, base * 7)
+    _ycsb(idx, oracle, rng)
+    items = oracle.items()
+    keys = np.asarray([k for k, _ in items[:2000]])
+    want = np.asarray([v for _, v in items[:2000]])
+    got, found = idx.lookup(keys)
+    assert found.all()
+    assert (got == want).all()
+    assert idx.counters["handovers"] > 0          # skew exercised HOCL
+    assert idx.throughput_mops() > 0
+
+
+def test_sherman_beats_fg_on_skewed_writes():
+    """The paper's headline: order-of-magnitude gap under skewed writes."""
+    rng = np.random.default_rng(12)
+    base = rng.choice(1 << 18, size=5_000, replace=False)
+    results = {}
+    for name, feat in (("fg", FG_PLUS), ("sherman", SHERMAN)):
+        idx = ShermanIndex.build(CFG, base, base, features=feat)
+        hot = rng.integers(0, 32, size=2_048).astype(np.int32)
+        idx.insert(hot, hot)
+        results[name] = (idx.throughput_mops(),
+                         idx.latency_percentiles()[99])
+    assert results["sherman"][0] > 5 * results["fg"][0]
+    assert results["sherman"][1] < results["fg"][1] / 5
+
+
+def test_write_bytes_two_level_versions():
+    """§5.5.3: non-split writes move ~entry_bytes, not node_bytes."""
+    rng = np.random.default_rng(13)
+    base = rng.choice(1 << 18, size=5_000, replace=False)
+    idx = ShermanIndex.build(CFG, base, base, features=SHERMAN)
+    keys = base[:512].astype(np.int32)            # updates: no splits
+    idx.insert(keys, keys)
+    wb = np.concatenate(idx.write_bytes)
+    assert np.median(wb) == CFG.entry_bytes       # 17B with 8B keys/values
+    fg = ShermanIndex.build(CFG, base, base, features=FG_PLUS)
+    fg.insert(keys, keys)
+    assert np.median(np.concatenate(fg.write_bytes)) == CFG.node_bytes
+
+
+def test_paged_kv_page_table_roundtrip():
+    """The serving integration: (seq, page) -> slot mappings survive a
+    full admit/lookup/evict cycle (examples/serve_paged.py in miniature)."""
+    table = ShermanIndex.build(CFG, np.zeros(0, np.int32),
+                               np.zeros(0, np.int32))
+    keys = np.asarray([s * 4096 + p for s in range(8) for p in range(4)],
+                      np.int32)
+    slots = np.arange(len(keys), dtype=np.int32)
+    table.insert(keys, slots)
+    got, found = table.lookup(keys)
+    assert found.all() and (got == slots).all()
+    # evict sequence 3 via ordered range scan
+    rk, rv, rn = table.range(np.asarray([3 * 4096], np.int32), count=4,
+                             max_leaves=16)
+    mine = [int(k) for k in rk[0][:rn[0]] if k // 4096 == 3]
+    assert len(mine) == 4
+    table.delete(np.asarray(mine, np.int32))
+    _, found = table.lookup(np.asarray(mine, np.int32))
+    assert not found.any()

@@ -1,115 +1,50 @@
-"""Shared benchmark harness: YCSB-style workloads over the Sherman index.
+"""Shared benchmark harness — now a thin shim over :mod:`repro.workloads`.
+
+The workload engine (specs, key generators, driver, ``RunResult``) lives in
+``src/repro/workloads``; this module keeps the historical benchmark entry
+points (``build_index``, ``run_mix``, ``zipf_keys``) as aliases so older
+scripts keep working.  New code should import ``repro.workloads`` directly.
 
 Scaled to the CPU container (smaller keyspace / op counts than the paper's
 1B-key, 8-server cluster) — the netsim plane (repro.core.netsim) prices the
 measured structural metrics with the paper's hardware constants, so the
 *ratios* (Sherman vs FG+, ablation ladder, skew collapse) are the
-reproduction targets; EXPERIMENTS.md compares them against the paper's.
+reproduction targets.
 """
 from __future__ import annotations
 
-import dataclasses
+from repro.core import TreeConfig
+from repro.core.netsim import Features
+from repro.workloads import (DEFAULT_CFG, KEYSPACE, RunResult, WorkloadSpec,
+                             live_records, run_workload, zipf_keys)
+from repro.workloads import build_index as _build_index
 
-import numpy as np
+__all__ = ["DEFAULT_CFG", "KEYSPACE", "BULK", "RunResult", "zipf_keys",
+           "build_index", "run_mix", "csv_row"]
 
-from repro.core import ShermanIndex, TreeConfig
-from repro.core.netsim import Features, NetConfig
-
-DEFAULT_CFG = TreeConfig(n_ms=4, nodes_per_ms=4096, fanout=16,
-                         n_locks_per_ms=4096, max_height=7, n_cs=8)
-KEYSPACE = 1 << 20
 BULK = 60_000
-
-
-_ZETA_CACHE: dict = {}
-
-
-def _zeta(n: int, theta: float) -> float:
-    key = (n, theta)
-    if key not in _ZETA_CACHE:
-        # zeta(n, theta) with an integral tail approximation (fast + exact
-        # enough for the YCSB generator)
-        head = np.sum(1.0 / np.arange(1, 10_001) ** theta) \
-            if n > 10_000 else np.sum(1.0 / np.arange(1, n + 1) ** theta)
-        tail = ((n ** (1 - theta) - 10_000 ** (1 - theta)) / (1 - theta)
-                if n > 10_000 else 0.0)
-        _ZETA_CACHE[key] = float(head + tail)
-    return _ZETA_CACHE[key]
-
-
-def zipf_keys(rng, n, keyspace, theta: float) -> np.ndarray:
-    """YCSB ZipfianGenerator (Gray et al.), vectorized.
-
-    Rank 0 receives ~1/zeta of all accesses (≈6-7% at theta=0.99 over 2^20
-    keys) — the contention the paper's skewed workloads are about."""
-    if theta <= 0.0:
-        return rng.integers(0, keyspace, size=n).astype(np.int64)
-    zetan = _zeta(keyspace, theta)
-    zeta2 = _zeta(2, theta)
-    alpha = 1.0 / (1.0 - theta)
-    eta = (1 - (2.0 / keyspace) ** (1 - theta)) / (1 - zeta2 / zetan)
-    u = rng.random(n)
-    uz = u * zetan
-    ranks = np.where(
-        uz < 1.0, 0,
-        np.where(uz < 1.0 + 0.5 ** theta, 1,
-                 (keyspace * (eta * u - eta + 1) ** alpha).astype(np.int64)))
-    ranks = np.clip(ranks, 0, keyspace - 1).astype(np.int64)
-    # scatter hot ranks across the keyspace deterministically
-    return (ranks * 2_654_435_761) % keyspace
-
-
-@dataclasses.dataclass
-class RunResult:
-    mops: float
-    p50_us: float
-    p90_us: float
-    p99_us: float
-    counters: dict
 
 
 def build_index(features: Features, cfg: TreeConfig = DEFAULT_CFG,
                 bulk: int = BULK, cache_bytes: int = 64 << 20,
-                seed: int = 0) -> ShermanIndex:
-    rng = np.random.default_rng(seed)
-    keys = rng.choice(KEYSPACE, size=bulk, replace=False)
-    vals = rng.integers(0, 1 << 30, size=bulk)
-    return ShermanIndex.build(cfg, keys, vals, features=features,
-                              cache_bytes=cache_bytes)
+                seed: int = 0):
+    return _build_index(features, cfg, records=bulk,
+                        cache_bytes=cache_bytes, seed=seed)
 
 
-def run_mix(idx: ShermanIndex, *, read_frac: float, skew: float,
-            n_ops: int = 8_192, batch: int = 1_024, range_frac: float = 0.0,
+def run_mix(idx, *, read_frac: float, skew: float, n_ops: int = 8_192,
+            batch: int = 1_024, range_frac: float = 0.0,
             range_size: int = 0, seed: int = 1) -> RunResult:
-    """Run a read/write/range mix and derive netsim performance."""
-    rng = np.random.default_rng(seed)
-    for s in range(0, n_ops, batch):
-        b = min(batch, n_ops - s)
-        keys = zipf_keys(rng, b, KEYSPACE, skew).astype(np.int32)
-        r = rng.random(b)
-        n_read = int(read_frac * b)
-        n_range = int(range_frac * b)
-        if n_range:
-            idx.range(keys[:n_range], count=range_size,
-                      max_leaves=max(4, range_size))
-        if n_read:
-            idx.lookup(keys[n_range:n_range + n_read])
-        rest = keys[n_range + n_read:]
-        if rest.size:
-            idx.insert(rest, rng.integers(0, 1 << 30, rest.size
-                                          ).astype(np.int32))
-    lat = []
-    if idx.latencies_write:
-        lat.append(np.concatenate(idx.latencies_write))
-    if idx.latencies_read:
-        lat.append(np.concatenate(idx.latencies_read))
-    lat = np.concatenate(lat) if lat else np.zeros(1)
-    return RunResult(
-        mops=idx.throughput_mops(),
-        p50_us=float(np.percentile(lat, 50)) * 1e6,
-        p90_us=float(np.percentile(lat, 90)) * 1e6,
-        p99_us=float(np.percentile(lat, 99)) * 1e6,
-        counters=dict(idx.counters))
+    """Historical entry point: an ad-hoc read/write/range mix.
+
+    The distribution draws over the records actually live in ``idx``
+    (however it was loaded), so reads hit and updates contend."""
+    spec = WorkloadSpec(
+        name="adhoc", read=read_frac, scan=range_frac,
+        update=max(0.0, 1.0 - read_frac - range_frac), theta=skew,
+        ops=n_ops, batch=batch, scan_len=range_size or 10,
+        load_records=max(1, live_records(idx)))
+    return run_workload(idx, spec, seed=seed)
 
 
 def csv_row(name: str, us_per_call: float, derived: str) -> str:

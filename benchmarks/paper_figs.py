@@ -1,28 +1,28 @@
 """One function per paper table/figure (Sherman, SIGMOD'22).
 
 Each returns a list of CSV rows "name,us_per_call,derived" and prints a
-small human table.  Workloads follow Table 3: write-only (100% insert),
-write-intensive (50/50), read-intensive (5/95), range-only, range-write.
+small human table.  All workload mixes come from the unified engine in
+:mod:`repro.workloads` (Table 3 presets: write-only, write-intensive,
+read-intensive, range-only, range-write) — this module holds no private
+workload logic, only figure orchestration.
 """
 from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import (DEFAULT_CFG, RunResult, build_index, csv_row,
-                               run_mix)
-from repro.core.netsim import (ABLATION_LADDER, FG_PLUS, SHERMAN, Features,
-                               NetConfig)
-
-WORKLOADS = {
-    "write-only": dict(read_frac=0.0),
-    "write-intensive": dict(read_frac=0.5),
-    "read-intensive": dict(read_frac=0.95),
-}
+from benchmarks.common import csv_row
+from repro.core.netsim import ABLATION_LADDER, FG_PLUS, SHERMAN, NetConfig
+from repro.workloads import (DEFAULT_CFG, build_index, get_preset,
+                             run_workload)
 
 
-def _run(features, skew, wl="write-intensive", n_ops=6_144, **kw):
-    idx = build_index(features)
-    return run_mix(idx, skew=skew, **WORKLOADS[wl], n_ops=n_ops, **kw)
+def _run(features, skew, wl="write-intensive", n_ops=6_144, *, cfg=None,
+         records=60_000, cache_bytes=64 << 20, **spec_kw):
+    spec = get_preset(wl, theta=skew, ops=n_ops, load_records=records,
+                      **spec_kw)
+    idx = build_index(features, cfg or DEFAULT_CFG, records=records,
+                      cache_bytes=cache_bytes)
+    return idx, run_workload(idx, spec)
 
 
 def table1_one_sided(n_ops=6_144):
@@ -33,7 +33,7 @@ def table1_one_sided(n_ops=6_144):
           f"{'p99us':>10s}")
     for wl in ("read-intensive", "write-intensive"):
         for dist, skew in (("uniform", 0.0), ("skew", 0.99)):
-            r = _run(FG_PLUS, skew, wl, n_ops)
+            _, r = _run(FG_PLUS, skew, wl, n_ops)
             print(f"{wl:18s} {dist:8s} {r.mops:8.2f} {r.p50_us:8.1f} "
                   f"{r.p99_us:10.1f}")
             rows.append(csv_row(f"table1/{wl}/{dist}", r.p50_us,
@@ -50,7 +50,7 @@ def fig10_11_breakdown(skew: float, label: str, n_ops=6_144):
     for wl in ("write-only", "write-intensive", "read-intensive"):
         base = None
         for name, feat in ABLATION_LADDER:
-            r = _run(feat, skew, wl, n_ops)
+            _, r = _run(feat, skew, wl, n_ops)
             base = base or r.mops
             print(f"{name:14s}{wl:18s} {r.mops:8.2f} {r.p50_us:8.1f} "
                   f"{r.p99_us:10.1f}")
@@ -66,20 +66,12 @@ def fig12_range(n_ops=2_048):
     rows = []
     print("\n== Fig 12: range query ==")
     for size in (10, 50):
-        for feat, nm in ((FG_PLUS, "FG+"), (SHERMAN, "Sherman")):
-            idx = build_index(feat)
-            r = run_mix(idx, read_frac=0.0, range_frac=1.0,
-                        range_size=size, skew=0.99, n_ops=n_ops)
-            print(f"range-only size={size:4d} {nm:8s} mops={r.mops:.2f}")
-            rows.append(csv_row(f"fig12/range-only/{size}/{nm}", r.p50_us,
-                                f"mops={r.mops:.3f}"))
-        for feat, nm in ((FG_PLUS, "FG+"), (SHERMAN, "Sherman")):
-            idx = build_index(feat)
-            r = run_mix(idx, read_frac=0.0, range_frac=0.5,
-                        range_size=size, skew=0.99, n_ops=n_ops)
-            print(f"range-write size={size:4d} {nm:8s} mops={r.mops:.2f}")
-            rows.append(csv_row(f"fig12/range-write/{size}/{nm}", r.p50_us,
-                                f"mops={r.mops:.3f}"))
+        for wl in ("range-only", "range-write"):
+            for feat, nm in ((FG_PLUS, "FG+"), (SHERMAN, "Sherman")):
+                _, r = _run(feat, 0.99, wl, n_ops, scan_len=size)
+                print(f"{wl} size={size:4d} {nm:8s} mops={r.mops:.2f}")
+                rows.append(csv_row(f"fig12/{wl}/{size}/{nm}", r.p50_us,
+                                    f"mops={r.mops:.3f}"))
     return rows
 
 
@@ -90,9 +82,7 @@ def fig13_scalability(n_threads=(128, 256, 512, 1024, 2048)):
     for skew, nm in ((0.0, "uniform"), (0.9, "skew0.9"), (0.99, "skew0.99")):
         for feat, sysn in ((FG_PLUS, "FG+"), (SHERMAN, "Sherman")):
             for nt in n_threads:
-                idx = build_index(feat)
-                r = run_mix(idx, read_frac=0.5, skew=skew, n_ops=2 * nt,
-                            batch=nt)
+                _, r = _run(feat, skew, "write-intensive", 2 * nt, batch=nt)
                 print(f"{nm:9s} {sysn:8s} threads={nt:5d} "
                       f"mops={r.mops:8.2f}")
                 rows.append(csv_row(f"fig13/{nm}/{sysn}/{nt}", r.p50_us,
@@ -105,21 +95,15 @@ def fig14_internal(n_ops=6_144):
     rows = []
     print("\n== Fig 14: internal metrics (write-intensive, skew 0.99) ==")
     for feat, nm in ((FG_PLUS, "FG+"), (SHERMAN, "Sherman")):
-        idx = build_index(feat)
-        r = run_mix(idx, read_frac=0.5, skew=0.99, n_ops=n_ops)
-        rtts = np.concatenate(idx.rtts_write) if idx.rtts_write else \
-            np.zeros(1)
-        wb = np.concatenate(idx.write_bytes) if idx.write_bytes else \
-            np.zeros(1)
-        p99_rtt = float(np.percentile(rtts, 99))
-        med_wb = float(np.median(wb))
-        print(f"{nm:8s} rtt p50={np.percentile(rtts, 50):.0f} "
-              f"p99={p99_rtt:.0f}  write-bytes median={med_wb:.0f}  "
+        idx, r = _run(feat, 0.99, "write-intensive", n_ops)
+        print(f"{nm:8s} rtt p50={r.rtt_p50:.0f} p99={r.rtt_p99:.0f}  "
+              f"write-bytes median={r.write_bytes_median:.0f}  "
               f"cas_msgs={idx.counters['cas_msgs']}")
         rows.append(csv_row(
             f"fig14/{nm}", r.p50_us,
-            f"rtt_p50={np.percentile(rtts, 50):.0f};rtt_p99={p99_rtt:.0f};"
-            f"write_bytes={med_wb:.0f};cas={idx.counters['cas_msgs']}"))
+            f"rtt_p50={r.rtt_p50:.0f};rtt_p99={r.rtt_p99:.0f};"
+            f"write_bytes={r.write_bytes_median:.0f};"
+            f"cas={idx.counters['cas_msgs']}"))
     return rows
 
 
@@ -131,8 +115,8 @@ def fig15_sensitivity():
     for kb in (16, 64, 256, 1024):
         for feat, nm in ((FG_PLUS, "FG+"), (SHERMAN, "Sherman")):
             cfg = dataclasses.replace(DEFAULT_CFG, key_bytes=kb, fanout=16)
-            idx = build_index(feat, cfg=cfg, bulk=20_000)
-            r = run_mix(idx, read_frac=0.5, skew=0.0, n_ops=2_048)
+            _, r = _run(feat, 0.0, "write-intensive", 2_048, cfg=cfg,
+                        records=20_000)
             print(f"key={kb:5d}B {nm:8s} mops={r.mops:8.2f}")
             rows.append(csv_row(f"fig15a/key{kb}/{nm}", r.p50_us,
                                 f"mops={r.mops:.3f}"))
@@ -140,9 +124,8 @@ def fig15_sensitivity():
     # smaller tree + longer run so the cache warms and capacities
     # differentiate (the paper warms over 1B ops; we scale cache/leaves)
     for cache_kb in (64, 256, 1024, 4096):
-        idx = build_index(SHERMAN, bulk=8_000,
-                          cache_bytes=cache_kb << 10)
-        r = run_mix(idx, read_frac=0.5, skew=0.0, n_ops=12_288)
+        idx, r = _run(SHERMAN, 0.0, "write-intensive", 12_288,
+                      records=8_000, cache_bytes=cache_kb << 10)
         hr = idx.cache.hit_ratio
         print(f"cache={cache_kb:5d}KB mops={r.mops:8.2f} "
               f"hit_ratio={hr:.3f}")
@@ -157,10 +140,10 @@ def fig16_hocl(n_locks=1_024, n_threads=1_024):
     Modeled through the lock plane only (hocl group stats + netsim CAS
     pricing), matching the paper's lock-table microbenchmark."""
     import jax.numpy as jnp
-    from benchmarks.common import zipf_keys
+
     from repro.core import hocl
-    from repro.core.netsim import NetConfig
     from repro.core.tree import TreeConfig
+    from repro.workloads import zipf_keys
     rows = []
     net = NetConfig()
     cfg = TreeConfig(n_ms=1, nodes_per_ms=n_locks, fanout=4,

@@ -1,12 +1,14 @@
 """Benchmark driver: one function per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows (stdout) plus human tables.
-``--quick`` shrinks op counts for CI-speed runs.
+All figures run on the unified workload engine (:mod:`repro.workloads`).
+Prints ``name,us_per_call,derived`` CSV rows (stdout) plus human tables;
+``--quick`` shrinks op counts for CI-speed runs and ``--json`` writes the
+rows to a ``BENCH_*.json`` file.
 """
 from __future__ import annotations
 
 import argparse
-import sys
+import json
 
 
 def main(argv=None) -> None:
@@ -16,6 +18,9 @@ def main(argv=None) -> None:
     ap.add_argument("--only", default="",
                     help="comma list: table1,fig10,fig11,fig12,fig13,"
                          "fig14,fig15,fig16")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows to PATH (default "
+                         "BENCH_paper_figs.json with --json '')")
     args = ap.parse_args(argv)
     from benchmarks import paper_figs as F
 
@@ -48,6 +53,18 @@ def main(argv=None) -> None:
     print("\n# CSV")
     for r in rows:
         print(r)
+
+    if args.json is not None:
+        path = args.json or "BENCH_paper_figs.json"
+        payload = []
+        for r in rows:
+            name, us, derived = r.split(",", 2)
+            payload.append({"name": name, "us_per_call": float(us),
+                            "derived": derived})
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+        print(f"wrote {path}")
 
 
 if __name__ == "__main__":

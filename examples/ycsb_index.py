@@ -1,7 +1,13 @@
 """YCSB workloads on the Sherman index — the paper's own evaluation loop.
 
+All mixes come from the unified engine (``repro.workloads``); this example
+is just a thin invocation of it.  Equivalent CLI::
+
+    PYTHONPATH=src python -m repro.workloads --preset write-intensive \
+        --skew 0.99 --systems sherman
+
     PYTHONPATH=src:. python examples/ycsb_index.py \
-        --workload write-intensive --skew 0.99 --system sherman --ops 4096
+        --workload ycsb-a --skew 0.99 --system sherman --ops 4096
 """
 import argparse
 import sys
@@ -10,30 +16,26 @@ sys.path.insert(0, ".")
 
 
 def main():
+    from repro.workloads import (PRESETS, SYSTEMS, build_index, get_preset,
+                                 run_workload)
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--workload", default="write-intensive",
-                    choices=["write-only", "write-intensive",
-                             "read-intensive", "range-only"])
+                    choices=sorted(PRESETS))
     ap.add_argument("--skew", type=float, default=0.99)
     ap.add_argument("--system", default="sherman",
-                    choices=["sherman", "fg+"])
+                    choices=sorted(SYSTEMS))
     ap.add_argument("--ops", type=int, default=4_096)
     ap.add_argument("--batch", type=int, default=1_024)
     args = ap.parse_args()
 
-    from benchmarks.common import build_index, run_mix
-    from repro.core.netsim import FG_PLUS, SHERMAN
-
-    feat = SHERMAN if args.system == "sherman" else FG_PLUS
-    idx = build_index(feat)
-    read_frac = {"write-only": 0.0, "write-intensive": 0.5,
-                 "read-intensive": 0.95, "range-only": 0.0}[args.workload]
-    range_frac = 1.0 if args.workload == "range-only" else 0.0
-    r = run_mix(idx, read_frac=read_frac, skew=args.skew,
-                n_ops=args.ops, batch=args.batch,
-                range_frac=range_frac, range_size=10)
+    spec = get_preset(args.workload, theta=args.skew, ops=args.ops,
+                      batch=args.batch)
+    idx = build_index(SYSTEMS[args.system], records=spec.load_records)
+    r = run_workload(idx, spec, system=args.system)
     print(f"{args.system} {args.workload} skew={args.skew}: "
           f"{r.mops:.2f} Mops  p50={r.p50_us:.1f}us  p99={r.p99_us:.1f}us")
+    print("ops:", r.op_counts)
     print("counters:", {k: v for k, v in r.counters.items()
                         if not k.startswith("sim")})
 

@@ -1,0 +1,25 @@
+#!/usr/bin/env bash
+# CI smoke: tier-1 tests + a quick paper-figure run + the workload CLI.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}"
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+
+echo "== tier-1 tests =="
+python -m pytest -x -q
+
+echo "== benchmark smoke (Table 1, quick) =="
+python benchmarks/run.py --quick --only table1
+
+echo "== workload CLI smoke (YCSB-A, tiny) =="
+python -m repro.workloads --preset ycsb-a --quick \
+    --records 4000 --ops 512 --batch 256 --json BENCH_ci_smoke.json
+python - <<'EOF'
+import json
+d = json.load(open("BENCH_ci_smoke.json"))
+systems = {r["system"] for r in d["results"]}
+assert systems == {"sherman", "fg+"}, systems
+assert all(r["mops"] > 0 and r["p99_us"] > 0 for r in d["results"])
+print("BENCH_ci_smoke.json OK:",
+      {r["system"]: round(r["mops"], 2) for r in d["results"]}, "Mops")
+EOF

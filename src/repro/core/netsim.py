@@ -13,7 +13,7 @@ Constants (paper sources):
   * host-memory RDMA_CAS needs 2 PCIe transactions; conflicting commands on
     the same NIC bucket serialize on that PCIe time (§3.2.2, Fig. 2)
 
-Queueing model (documented in DESIGN.md §5): ops contending for one node
+Queueing model (documented in docs/DESIGN.md §5): ops contending for one node
 lock serialize FIFO under HOCL (wait = rank × hold).  Without the local
 lock hierarchy, waiters spin with random success, burning one CAS per hold
 interval — so CAS traffic on a hot lock grows ~quadratically with the group

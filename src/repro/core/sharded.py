@@ -36,6 +36,27 @@ from repro.core.tree import (EMPTY_KEY, NULL_PTR, TreeConfig, TreeState)
 MEM_AXIS = "model"       # the mem pool shards over the TP/model axis
 DATA_AXIS = "data"
 
+# jax.shard_map landed after 0.4.x (older versions expose it under
+# jax.experimental.shard_map) and its replication-check kwarg was renamed
+# check_rep -> check_vma along the way, so probe the signature, not the
+# version.
+def _shard_map_compat():
+    import inspect
+    sm = getattr(jax, "shard_map", None)
+    if sm is None:
+        from jax.experimental.shard_map import shard_map as sm
+    try:
+        params = inspect.signature(sm).parameters
+    except (TypeError, ValueError):
+        params = {}
+    for kw in ("check_vma", "check_rep"):
+        if kw in params:
+            return sm, {kw: False}
+    return sm, {}
+
+
+_shard_map, _SHARD_MAP_KW = _shard_map_compat()
+
 
 def tree_pspecs(cfg: TreeConfig) -> TreeState:
     """PartitionSpecs: pool rows over the mem axis, lock tables likewise."""
@@ -160,11 +181,11 @@ def routed_lookup_fn(cfg: TreeConfig, mesh: Mesh, depth: int = 2):
     cache_specs = dict(rows=P(), keys=P(), vals=P(), level=P(), root=P())
 
     @functools.partial(
-        jax.shard_map, mesh=mesh,
+        _shard_map, mesh=mesh,
         in_specs=(specs, cache_specs, P(DATA_AXIS)),
         out_specs=RoutedLookupResult(P(DATA_AXIS), P(DATA_AXIS),
                                      P(DATA_AXIS), P(DATA_AXIS)),
-        check_vma=False)
+        **_SHARD_MAP_KW)
     def fn(st_local, cache, qkeys):
         # responses are identical across the mem axis (psum-combined);
         # one copy per data shard survives

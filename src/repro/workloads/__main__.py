@@ -1,0 +1,3 @@
+from repro.workloads.cli import main
+
+main()

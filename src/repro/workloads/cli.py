@@ -1,0 +1,96 @@
+"""``python -m repro.workloads`` — ad-hoc YCSB sweeps from the shell.
+
+    python -m repro.workloads --preset ycsb-a --quick
+    python -m repro.workloads --preset write-intensive --skew 0.9 \
+        --systems sherman,fg+ --json out.json
+    python -m repro.workloads --list
+"""
+from __future__ import annotations
+
+import argparse
+from typing import Optional
+
+QUICK = dict(load_records=8_000, ops=1_024, batch=512)
+
+
+def main(argv: Optional[list] = None) -> str:
+    from repro.workloads import engine
+    from repro.workloads.spec import PRESETS, get_preset
+
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.workloads",
+        description="Run a named YCSB/Table-3 workload against one or more "
+                    "index configurations and write a BENCH_*.json.")
+    ap.add_argument("--preset", default=None,
+                    help=f"workload name ({', '.join(sorted(PRESETS))})")
+    ap.add_argument("--list", action="store_true",
+                    help="list presets and systems, then exit")
+    ap.add_argument("--systems", default="sherman,fg+",
+                    help="comma list of feature configs (default "
+                         "sherman,fg+); see --list")
+    ap.add_argument("--skew", type=float, default=None,
+                    help="override the preset's zipfian theta")
+    ap.add_argument("--ops", type=int, default=None,
+                    help="override run-phase op count")
+    ap.add_argument("--batch", type=int, default=None,
+                    help="override ops per batched wave")
+    ap.add_argument("--records", type=int, default=None,
+                    help="override load-phase record count")
+    ap.add_argument("--scan-len", type=int, default=None,
+                    help="override entries per scan op")
+    ap.add_argument("--seed", type=int, default=1)
+    ap.add_argument("--quick", action="store_true",
+                    help=f"CI-sized run ({QUICK})")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="output path (default BENCH_<preset>.json)")
+    args = ap.parse_args(argv)
+
+    if args.list:
+        print("presets:")
+        for name, s in sorted(PRESETS.items()):
+            mix = ", ".join(f"{k}={v:g}" for k, v in s.fractions().items()
+                            if v)
+            print(f"  {name:16s} {mix}  [{s.distribution}"
+                  f"{f' theta={s.theta:g}' if s.distribution != 'uniform' else ''}]")
+        print("systems:", ", ".join(sorted(engine.SYSTEMS)))
+        return ""
+    if not args.preset:
+        ap.error("--preset is required (or use --list)")
+
+    overrides = dict(QUICK) if args.quick else {}
+    for field, val in (("theta", args.skew), ("ops", args.ops),
+                       ("batch", args.batch), ("load_records", args.records),
+                       ("scan_len", args.scan_len)):
+        if val is not None:
+            if field != "theta" and val <= 0:
+                ap.error(f"--{field.replace('load_records', 'records')} "
+                         f"must be positive, got {val}")
+            overrides[field] = val
+    if args.preset not in PRESETS:
+        ap.error(f"unknown preset {args.preset!r}; "
+                 f"known: {', '.join(sorted(PRESETS))}")
+    spec = get_preset(args.preset, **overrides)
+    systems = [s.strip() for s in args.systems.split(",") if s.strip()]
+    if not systems:
+        ap.error("--systems is empty")
+    for s in systems:                      # validate before spending time
+        if s.lower() not in engine.SYSTEMS:
+            ap.error(f"unknown system {s!r}; "
+                     f"known: {', '.join(sorted(engine.SYSTEMS))}")
+
+    results = engine.run_systems(spec, systems, seed=args.seed)
+    print(f"{'system':16s} {'Mops':>8s} {'p50us':>8s} {'p99us':>10s} "
+          f"{'rtt50':>6s} {'wr.B':>7s}")
+    for r in results:
+        print(f"{r.system:16s} {r.mops:8.2f} {r.p50_us:8.1f} "
+              f"{r.p99_us:10.1f} {r.rtt_p50:6.0f} "
+              f"{r.write_bytes_median:7.0f}")
+
+    path = args.json or f"BENCH_{spec.name.replace('-', '_')}.json"
+    engine.write_json(path, spec, results)
+    print(f"wrote {path}")
+    return path
+
+
+if __name__ == "__main__":
+    main()

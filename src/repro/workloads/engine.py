@@ -1,0 +1,221 @@
+"""The workload driver: run any :class:`WorkloadSpec` against the index.
+
+One engine for every perf claim in the repo: benchmarks, examples, and CI
+all come through :func:`run_workload`, which executes the spec's op mix in
+batched waves and derives a structured :class:`RunResult` (throughput,
+latency percentiles, round trips, write bytes, per-op-type counters) from
+the index's netsim counters.  Results serialize to ``BENCH_*.json`` via
+:func:`write_json`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core import ShermanIndex, TreeConfig
+from repro.core.netsim import ABLATION_LADDER, FG_PLUS, SHERMAN, Features
+from repro.workloads.keygen import draw_keys, scramble
+from repro.workloads.spec import OP_KINDS, WorkloadSpec
+
+KEYSPACE = 1 << 20            # power of two => rank scramble is a bijection
+DEFAULT_CFG = TreeConfig(n_ms=4, nodes_per_ms=4096, fanout=16,
+                         n_locks_per_ms=4096, max_height=7, n_cs=8)
+VAL_MASK = (1 << 30) - 1
+
+#: Named feature configurations runnable from the CLI / benchmarks:
+#: ``sherman``, ``fg+``, and the Fig. 10/11 ablation rungs
+#: (``+combine``, ``+on-chip``, ``+hierarchical``, ``+2-level ver``).
+SYSTEMS: dict[str, Features] = {
+    "sherman": SHERMAN,
+    "fg+": FG_PLUS,
+    **{name.lower(): feat for name, feat in ABLATION_LADDER},
+}
+
+
+@dataclasses.dataclass
+class RunResult:
+    """Structured result of one workload run (one system, one spec)."""
+
+    mops: float
+    p50_us: float
+    p90_us: float
+    p99_us: float
+    counters: dict
+    system: str = ""
+    workload: str = ""
+    n_ops: int = 0
+    read_p50_us: float = 0.0
+    read_p99_us: float = 0.0
+    write_p50_us: float = 0.0
+    write_p99_us: float = 0.0
+    rtt_p50: float = 0.0
+    rtt_p99: float = 0.0
+    write_bytes_median: float = 0.0
+    op_counts: dict = dataclasses.field(default_factory=dict)
+
+    def to_dict(self) -> dict:
+        return _pyify(dataclasses.asdict(self))
+
+
+def _pyify(x):
+    """Recursively convert numpy scalars so the result is json-safe."""
+    if isinstance(x, dict):
+        return {k: _pyify(v) for k, v in x.items()}
+    if isinstance(x, (list, tuple)):
+        return [_pyify(v) for v in x]
+    if isinstance(x, np.integer):
+        return int(x)
+    if isinstance(x, np.floating):
+        return float(x)
+    return x
+
+
+def build_index(features: Features, cfg: TreeConfig = DEFAULT_CFG, *,
+                records: int = 60_000, keyspace: int = KEYSPACE,
+                cache_bytes: int = 64 << 20, seed: int = 0,
+                fill: float = 0.8) -> ShermanIndex:
+    """Load phase: bulk-load ``records`` records (insertion ranks
+    ``0..records`` scrambled across the keyspace, YCSB-style)."""
+    rng = np.random.default_rng(seed)
+    keys = scramble(np.arange(records, dtype=np.int64), keyspace)
+    vals = rng.integers(0, VAL_MASK, size=records)
+    return ShermanIndex.build(cfg, keys, vals, fill=fill, features=features,
+                              cache_bytes=cache_bytes)
+
+
+def live_records(idx: ShermanIndex) -> int:
+    """Count live leaf entries — the record-space size for distribution
+    draws when the index wasn't built by :func:`build_index`'s load phase."""
+    from repro.core.tree import EMPTY_KEY
+    leaf = (np.asarray(idx.state.level) == 0) & \
+        ~np.asarray(idx.state.free_bit)
+    return int((np.asarray(idx.state.keys)[leaf] != EMPTY_KEY).sum())
+
+
+def _batch_counts(spec: WorkloadSpec, b: int) -> dict:
+    """Deterministic per-batch op counts: floor each fraction, hand the
+    remainder to the largest fractions (stable shapes => stable jit cache)."""
+    fracs = [(k, getattr(spec, k)) for k in OP_KINDS]
+    counts = {k: int(f * b) for k, f in fracs}
+    rem = b - sum(counts.values())
+    for k, f in sorted(fracs, key=lambda kv: -kv[1]):
+        if rem <= 0:
+            break
+        if f > 0:
+            counts[k] += 1
+            rem -= 1
+    return counts
+
+
+def run_workload(idx: ShermanIndex, spec: WorkloadSpec, *, seed: int = 1,
+                 keyspace: int = KEYSPACE, system: str = "") -> RunResult:
+    """Run ``spec``'s op mix against ``idx`` and price it via netsim.
+
+    The result reports only this run's deltas, so several runs may share one
+    index (e.g. a warmup pass followed by a measured pass).
+    """
+    rng = np.random.default_rng(seed)
+    c0 = dict(idx.counters)
+    lw0, lr0 = len(idx.latencies_write), len(idx.latencies_read)
+    rt0, wb0 = len(idx.rtts_write), len(idx.write_bytes)
+
+    n_records = spec.load_records      # live records (grows with inserts)
+    cursor = spec.load_records         # next sequential insertion rank
+    op_counts = {k: 0 for k in OP_KINDS}
+
+    def draw(n):
+        return draw_keys(rng, n, distribution=spec.distribution,
+                         theta=spec.theta, nspace=n_records,
+                         keyspace=keyspace).astype(np.int32)
+
+    done = 0
+    while done < spec.ops:
+        b = min(spec.batch, spec.ops - done)
+        counts = _batch_counts(spec, b)
+        if counts["scan"]:
+            idx.range(draw(counts["scan"]), count=spec.scan_len,
+                      max_leaves=max(4, spec.scan_len))
+        if counts["read"]:
+            idx.lookup(draw(counts["read"]))
+        if counts["rmw"]:
+            keys = draw(counts["rmw"])
+            got, _ = idx.lookup(keys)
+            idx.insert(keys, (got.astype(np.int64) + 1) & VAL_MASK)
+        if counts["update"]:
+            keys = draw(counts["update"])
+            idx.insert(keys, rng.integers(0, VAL_MASK, keys.size))
+        if counts["delete"]:
+            idx.delete(draw(counts["delete"]))
+        if counts["insert"]:
+            ranks = np.arange(cursor, cursor + counts["insert"])
+            cursor += counts["insert"]
+            n_records = max(n_records, cursor)
+            idx.insert(scramble(ranks, keyspace).astype(np.int32),
+                       rng.integers(0, VAL_MASK, ranks.size))
+        for k in OP_KINDS:
+            op_counts[k] += counts[k]
+        done += b
+
+    sim_s = idx.counters["sim_time_s"] - c0.get("sim_time_s", 0.0)
+    lat_w = (np.concatenate(idx.latencies_write[lw0:])
+             if len(idx.latencies_write) > lw0 else np.zeros(0))
+    lat_r = (np.concatenate(idx.latencies_read[lr0:])
+             if len(idx.latencies_read) > lr0 else np.zeros(0))
+    lat = np.concatenate([lat_w, lat_r]) if lat_w.size + lat_r.size \
+        else np.zeros(1)
+    rtts = (np.concatenate(idx.rtts_write[rt0:])
+            if len(idx.rtts_write) > rt0 else np.zeros(1))
+    wb = (np.concatenate(idx.write_bytes[wb0:])
+          if len(idx.write_bytes) > wb0 else np.zeros(1))
+
+    def pct(a, p):
+        return float(np.percentile(a, p)) * 1e6 if a.size else 0.0
+
+    delta = {k: idx.counters[k] - c0.get(k, 0) for k in idx.counters}
+    return RunResult(
+        mops=done / sim_s / 1e6 if sim_s else float("inf"),
+        p50_us=pct(lat, 50), p90_us=pct(lat, 90), p99_us=pct(lat, 99),
+        counters=delta, system=system, workload=spec.name, n_ops=done,
+        read_p50_us=pct(lat_r, 50), read_p99_us=pct(lat_r, 99),
+        write_p50_us=pct(lat_w, 50), write_p99_us=pct(lat_w, 99),
+        rtt_p50=float(np.percentile(rtts, 50)),
+        rtt_p99=float(np.percentile(rtts, 99)),
+        write_bytes_median=float(np.median(wb)),
+        op_counts={k: v for k, v in op_counts.items() if v})
+
+
+def run_systems(spec: WorkloadSpec, systems: Sequence[str] = ("sherman",
+                                                              "fg+"),
+                cfg: TreeConfig = DEFAULT_CFG, *, keyspace: int = KEYSPACE,
+                cache_bytes: int = 64 << 20,
+                seed: int = 1) -> list[RunResult]:
+    """Run one spec against several named systems (fresh index each)."""
+    out = []
+    for name in systems:
+        try:
+            feat = SYSTEMS[name.lower()]
+        except KeyError:
+            raise KeyError(f"unknown system {name!r}; "
+                           f"known: {', '.join(sorted(SYSTEMS))}") from None
+        idx = build_index(feat, cfg, records=spec.load_records,
+                          keyspace=keyspace, cache_bytes=cache_bytes)
+        out.append(run_workload(idx, spec, seed=seed, keyspace=keyspace,
+                                system=name))
+    return out
+
+
+def write_json(path: str, spec: WorkloadSpec,
+               results: Sequence[RunResult],
+               extra: Optional[dict] = None) -> str:
+    """Serialize a sweep to a ``BENCH_*.json`` file; returns the path."""
+    payload = {"spec": spec.to_dict(),
+               "results": [r.to_dict() for r in results]}
+    if extra:
+        payload.update(_pyify(extra))
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    return path

@@ -1,0 +1,101 @@
+"""Workload specifications: the YCSB A-F suite plus Sherman's Table 3 mixes.
+
+A :class:`WorkloadSpec` is a declarative description of a key-value workload
+— operation mix, key distribution, scan length, and load/run-phase sizes —
+that the engine (:mod:`repro.workloads.engine`) can run against any feature
+configuration of the index.  All named mixes used anywhere in the repo live
+here; benchmarks and examples must not carry private copies.
+
+Operation semantics (mapped onto the batched ``ShermanIndex`` API):
+
+* ``read``    — point lookup of a live record.
+* ``update``  — write to a live record drawn from the distribution (this is
+  what the paper's skewed-write workloads stress: hot-leaf contention).
+* ``insert``  — append a brand-new record (sequential insertion rank, the
+  YCSB insert semantics; grows the live-record count).
+* ``delete``  — remove a live record.
+* ``scan``    — short ordered range scan of ``scan_len`` entries.
+* ``rmw``     — read-modify-write: lookup then write back to the same key.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+OP_KINDS = ("read", "insert", "update", "delete", "scan", "rmw")
+DISTRIBUTIONS = ("zipfian", "uniform", "latest")
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadSpec:
+    """One workload: op-mix fractions must sum to 1."""
+
+    name: str
+    read: float = 0.0
+    insert: float = 0.0
+    update: float = 0.0
+    delete: float = 0.0
+    scan: float = 0.0
+    rmw: float = 0.0
+    distribution: str = "zipfian"   # zipfian | uniform | latest
+    theta: float = 0.99             # zipfian/latest skew (0 => uniform)
+    scan_len: int = 10              # entries per scan op
+    load_records: int = 60_000      # records bulk-loaded before the run
+    ops: int = 8_192                # run-phase operation count
+    batch: int = 1_024              # ops per batched wave
+
+    def __post_init__(self):
+        total = sum(getattr(self, k) for k in OP_KINDS)
+        if abs(total - 1.0) > 1e-6:
+            raise ValueError(
+                f"workload {self.name!r}: op fractions sum to {total}, not 1")
+        if self.distribution not in DISTRIBUTIONS:
+            raise ValueError(
+                f"workload {self.name!r}: unknown distribution "
+                f"{self.distribution!r} (want one of {DISTRIBUTIONS})")
+
+    def replace(self, **kw) -> "WorkloadSpec":
+        return dataclasses.replace(self, **kw)
+
+    def fractions(self) -> dict:
+        return {k: getattr(self, k) for k in OP_KINDS}
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def _s(name: str, **kw) -> WorkloadSpec:
+    return WorkloadSpec(name=name, **kw)
+
+
+#: The six standard YCSB core workloads (A-F).
+YCSB_PRESETS = {
+    "ycsb-a": _s("ycsb-a", read=0.5, update=0.5),
+    "ycsb-b": _s("ycsb-b", read=0.95, update=0.05),
+    "ycsb-c": _s("ycsb-c", read=1.0),
+    "ycsb-d": _s("ycsb-d", read=0.95, insert=0.05, distribution="latest"),
+    "ycsb-e": _s("ycsb-e", scan=0.95, insert=0.05),
+    "ycsb-f": _s("ycsb-f", read=0.5, rmw=0.5),
+}
+
+#: Sherman's Table 3 mixes (§5).  Writes are *updates of live records* so
+#: that skew produces the hot-leaf contention the paper measures.
+TABLE3_PRESETS = {
+    "write-only": _s("write-only", update=1.0),
+    "write-intensive": _s("write-intensive", read=0.5, update=0.5),
+    "read-intensive": _s("read-intensive", read=0.95, update=0.05),
+    "range-only": _s("range-only", scan=1.0),
+    "range-write": _s("range-write", scan=0.5, update=0.5),
+}
+
+PRESETS = {**YCSB_PRESETS, **TABLE3_PRESETS}
+
+
+def get_preset(name: str, **overrides) -> WorkloadSpec:
+    """Look up a named workload, optionally overriding fields
+    (``get_preset("ycsb-a", theta=0.7, ops=1024)``)."""
+    try:
+        spec = PRESETS[name]
+    except KeyError:
+        raise KeyError(f"unknown workload preset {name!r}; "
+                       f"known: {', '.join(sorted(PRESETS))}") from None
+    return spec.replace(**overrides) if overrides else spec

@@ -26,8 +26,8 @@ keys = rng.choice(50_000, size=400, replace=False)
 vals = rng.integers(0, 1 << 20, size=400)
 idx = ShermanIndex.build(cfg, keys, vals)
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import make_host_mesh
+mesh = make_host_mesh(2, 4)
 st = S.shard_tree(idx.state, mesh, cfg)
 cache = S.build_cache(cfg, idx.state, depth=3)
 fn = S.routed_lookup_fn(cfg, mesh, depth=3)

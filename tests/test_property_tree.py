@@ -1,6 +1,9 @@
 """Hypothesis property tests: the batched tree matches the oracle under
 arbitrary interleavings of insert/update/delete/lookup/range batches."""
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import ShermanIndex, TreeConfig, OracleIndex

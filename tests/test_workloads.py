@@ -1,0 +1,146 @@
+"""The unified workload engine: YCSB A-F end-to-end, key generators,
+result accounting, CLI + BENCH json emission, and the benchmark shim."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import TreeConfig
+from repro.workloads import (PRESETS, SYSTEMS, WorkloadSpec, build_index,
+                             draw_keys, get_preset, run_systems,
+                             run_workload, scramble, write_json, zipf_ranks)
+from repro.workloads.cli import main as cli_main
+
+CFG = TreeConfig(n_ms=2, nodes_per_ms=2048, fanout=16, n_locks_per_ms=1024,
+                 max_height=7, n_cs=4)
+TINY = dict(load_records=2_000, ops=256, batch=128)
+
+
+def _run(preset, system="sherman", **overrides):
+    spec = get_preset(preset, **{**TINY, **overrides})
+    idx = build_index(SYSTEMS[system], CFG, records=spec.load_records)
+    return run_workload(idx, spec, system=system), idx
+
+
+# -- the six standard YCSB presets, end to end ----------------------------
+
+@pytest.mark.parametrize("preset", ["ycsb-a", "ycsb-b", "ycsb-c", "ycsb-d",
+                                    "ycsb-e", "ycsb-f"])
+def test_ycsb_preset_end_to_end(preset):
+    r, idx = _run(preset)
+    spec = PRESETS[preset]
+    assert r.workload == preset and r.system == "sherman"
+    assert r.n_ops == TINY["ops"] == sum(r.op_counts.values())
+    assert r.mops > 0 and r.p50_us > 0 and r.p99_us >= r.p90_us >= r.p50_us
+    # realized mix tracks the spec fractions (up to per-batch rounding)
+    n_batches = TINY["ops"] // TINY["batch"]
+    for kind, frac in spec.fractions().items():
+        got = r.op_counts.get(kind, 0)
+        assert abs(got - frac * r.n_ops) <= 2 * n_batches, (kind, got)
+        if frac == 0:
+            assert got == 0
+    # the run is priced: netsim advanced and counted index-level ops
+    assert r.counters["sim_time_s"] > 0
+    assert r.counters["read_ops"] + r.counters["write_ops"] >= r.n_ops
+    # results are json-serializable as-is
+    json.dumps(r.to_dict())
+
+
+def test_reads_hit_loaded_records():
+    """Load phase + distribution draw target the same rank space."""
+    spec = get_preset("ycsb-c", **TINY)
+    idx = build_index(SYSTEMS["sherman"], CFG, records=spec.load_records)
+    rng = np.random.default_rng(3)
+    keys = draw_keys(rng, 512, distribution="zipfian", theta=0.99,
+                     nspace=spec.load_records, keyspace=1 << 20)
+    _, found = idx.lookup(keys.astype(np.int32))
+    assert found.all()
+
+
+def test_insert_grows_live_records_and_latest_reads_them():
+    r, idx = _run("ycsb-d")
+    n_ins = r.op_counts["insert"]
+    assert n_ins > 0
+    # the sequentially inserted ranks are live in the index
+    new = scramble(np.arange(TINY["load_records"],
+                             TINY["load_records"] + n_ins), 1 << 20)
+    _, found = idx.lookup(new.astype(np.int32))
+    assert found.all()
+
+
+def test_delete_and_rmw_spec():
+    spec = WorkloadSpec(name="churn", read=0.25, rmw=0.25, delete=0.25,
+                        insert=0.25, **TINY)
+    r, idx = _run("ycsb-a")  # warm index, then reuse it for the custom spec
+    r2 = run_workload(idx, spec, system="sherman", seed=7)
+    assert r2.n_ops == TINY["ops"]
+    assert r2.op_counts["delete"] > 0 and r2.op_counts["rmw"] > 0
+    # deltas: the second run's counters don't include the first run's
+    assert r2.counters["read_ops"] <= r.counters["read_ops"] + \
+        r2.n_ops * 2
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError):
+        WorkloadSpec(name="bad", read=0.5)            # fractions != 1
+    with pytest.raises(ValueError):
+        WorkloadSpec(name="bad", read=1.0, distribution="gaussian")
+    with pytest.raises(KeyError):
+        get_preset("ycsb-z")
+
+
+def test_zipf_ranks_skew_and_uniform():
+    rng = np.random.default_rng(0)
+    ranks = zipf_ranks(rng, 20_000, 1 << 20, 0.99)
+    # rank 0 is the hot key: ~6-7% of draws at theta=.99 over 2^20
+    assert 0.04 < (ranks == 0).mean() < 0.12
+    uni = zipf_ranks(rng, 20_000, 1 << 20, 0.0)
+    assert (uni == 0).mean() < 0.01
+
+
+def test_sherman_beats_fg_on_skewed_updates_via_engine():
+    spec = get_preset("write-only", **TINY)
+    res = {r.system: r for r in run_systems(spec, ("sherman", "fg+"), CFG)}
+    assert res["sherman"].mops > 2 * res["fg+"].mops
+    assert res["sherman"].p99_us < res["fg+"].p99_us
+
+
+# -- CLI + JSON emission ---------------------------------------------------
+
+def test_cli_writes_bench_json(tmp_path):
+    out = tmp_path / "BENCH_cli.json"
+    path = cli_main(["--preset", "ycsb-a", "--quick", "--records", "2000",
+                     "--ops", "256", "--batch", "128",
+                     "--json", str(out)])
+    assert path == str(out) and out.exists()
+    data = json.loads(out.read_text())
+    assert data["spec"]["name"] == "ycsb-a"
+    assert data["spec"]["ops"] == 256          # explicit flag beats --quick
+    systems = {r["system"] for r in data["results"]}
+    assert systems == {"sherman", "fg+"}
+    for r in data["results"]:
+        assert r["mops"] > 0 and r["p50_us"] > 0 and r["p99_us"] > 0
+
+
+def test_cli_list_runs():
+    assert cli_main(["--list"]) == ""
+
+
+def test_write_json_roundtrip(tmp_path):
+    r, _ = _run("ycsb-c")
+    p = tmp_path / "BENCH_x.json"
+    write_json(str(p), get_preset("ycsb-c", **TINY), [r],
+               extra={"note": "roundtrip"})
+    data = json.loads(p.read_text())
+    assert data["note"] == "roundtrip"
+    assert data["results"][0]["workload"] == "ycsb-c"
+
+
+# -- the legacy benchmark surface stays alive ------------------------------
+
+def test_benchmarks_common_shim():
+    from benchmarks.common import build_index as bi
+    from benchmarks.common import run_mix
+    idx = bi(SYSTEMS["sherman"], CFG, bulk=2_000)
+    r = run_mix(idx, read_frac=0.5, skew=0.99, n_ops=256, batch=128)
+    assert r.mops > 0 and r.p99_us >= r.p50_us

@@ -17,7 +17,7 @@ def main(argv=None) -> None:
                     help="smaller op counts (CI)")
     ap.add_argument("--only", default="",
                     help="comma list: table1,fig10,fig11,fig12,fig13,"
-                         "fig14,fig15,fig16")
+                         "fig14,fig15,fig16,cache")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write rows to PATH (default "
                          "BENCH_paper_figs.json with --json '')")
@@ -49,6 +49,8 @@ def main(argv=None) -> None:
         rows += F.fig15_sensitivity()
     if want("fig16"):
         rows += F.fig16_hocl()
+    if want("cache"):
+        rows += F.fig_cache_sweep(n_ops=max(1_024, n // 2))
 
     print("\n# CSV")
     for r in rows:

@@ -1,0 +1,80 @@
+#!/usr/bin/env python
+"""Fail on docstring/doc cross-references to nonexistent ``repro.*`` modules.
+
+Scans ``src/``, ``docs/``, ``benchmarks/``, ``examples/`` and the README
+for dotted ``repro.*`` references and checks each against the real module
+tree under ``src/``.  A reference is accepted when it names a module or
+package, or an attribute that actually exists on an imported module
+(``repro.core.ops.lookup_batch``).  Run from the repo root:
+
+    python scripts/check_xrefs.py
+"""
+from __future__ import annotations
+
+import importlib
+import os
+import re
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+REF = re.compile(r"repro\.[a-zA-Z_][a-zA-Z_.0-9]*")
+SCAN = ("src", "docs", "benchmarks", "examples", "README.md")
+EXTS = (".py", ".md")
+
+
+def _is_py(parts):
+    return os.path.isfile(os.path.join("src", *parts) + ".py")
+
+
+def _is_pkg(parts):
+    return os.path.isdir(os.path.join("src", *parts))
+
+
+def _has_attr(mod_parts, attr) -> bool:
+    try:
+        module = importlib.import_module(".".join(mod_parts))
+    except Exception:
+        return False
+    return hasattr(module, attr)
+
+
+def _ok(ref: str) -> bool:
+    parts = ref.rstrip(".").split(".")
+    if _is_py(parts) or _is_pkg(parts):
+        return True
+    if len(parts) > 1 and (_is_py(parts[:-1]) or _is_pkg(parts[:-1])):
+        # attribute of a module / name exported by a package __init__:
+        # import it for real rather than trusting a substring match
+        return _has_attr(parts[:-1], parts[-1])
+    return False
+
+
+def main() -> int:
+    bad = []
+    for top in SCAN:
+        if os.path.isfile(top):
+            files = [top]
+        else:
+            files = [os.path.join(r, f)
+                     for r, _, fs in os.walk(top) for f in fs
+                     if f.endswith(EXTS)]
+        for path in files:
+            with open(path, errors="replace") as f:
+                for lineno, line in enumerate(f, 1):
+                    for ref in REF.findall(line):
+                        if not _ok(ref):
+                            bad.append(f"{path}:{lineno}: dangling "
+                                       f"cross-reference {ref!r}")
+    for b in bad:
+        print(b, file=sys.stderr)
+    if bad:
+        print(f"{len(bad)} dangling repro.* cross-reference(s)",
+              file=sys.stderr)
+        return 1
+    print("xrefs OK: all repro.* references resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -11,15 +11,55 @@ python -m pytest -x -q
 echo "== benchmark smoke (Table 1, quick) =="
 python benchmarks/run.py --quick --only table1
 
+echo "== docstring cross-references =="
+python scripts/check_xrefs.py
+
 echo "== workload CLI smoke (YCSB-A, tiny) =="
 python -m repro.workloads --preset ycsb-a --quick \
     --records 4000 --ops 512 --batch 256 --json BENCH_ci_smoke.json
+
+echo "== cache-enabled workload smoke (YCSB-C, explicit --cache-bytes) =="
+python -m repro.workloads --preset ycsb-c --quick \
+    --records 4000 --ops 512 --batch 256 --systems sherman \
+    --cache-bytes $((64 << 20)) --json BENCH_ci_cache.json
+
+echo "== BENCH json schema validation (docs/BENCHMARKS.md) =="
 python - <<'EOF'
 import json
+
+SPEC_FIELDS = {"name", "read", "insert", "update", "delete", "scan", "rmw",
+               "distribution", "theta", "scan_len", "load_records", "ops",
+               "batch"}
+RESULT_FIELDS = {"mops", "p50_us", "p90_us", "p99_us", "counters", "system",
+                 "workload", "n_ops", "read_p50_us", "read_p99_us",
+                 "write_p50_us", "write_p99_us", "rtt_p50", "rtt_p99",
+                 "write_bytes_median", "op_counts", "cache_hits",
+                 "cache_misses", "cache_stale", "cache_hit_rate",
+                 "reads_per_lookup"}
+COUNTER_KEYS = {"phases", "write_ops", "read_ops", "leaf_splits",
+                "internal_splits", "root_splits", "split_same_ms",
+                "cas_msgs", "handovers", "msgs", "bytes", "sim_time_s",
+                "cache_hits", "cache_misses", "cache_stale", "lookup_ops",
+                "lookup_rtts"}
+
+for path in ("BENCH_ci_smoke.json", "BENCH_ci_cache.json"):
+    d = json.load(open(path))
+    missing = SPEC_FIELDS - set(d["spec"])
+    assert not missing, (path, "spec missing", missing)
+    for r in d["results"]:
+        assert RESULT_FIELDS <= set(r), (path, RESULT_FIELDS - set(r))
+        assert COUNTER_KEYS <= set(r["counters"]), \
+            (path, COUNTER_KEYS - set(r["counters"]))
+        assert r["mops"] > 0 and r["p99_us"] > 0
+
 d = json.load(open("BENCH_ci_smoke.json"))
 systems = {r["system"] for r in d["results"]}
 assert systems == {"sherman", "fg+"}, systems
-assert all(r["mops"] > 0 and r["p99_us"] > 0 for r in d["results"])
-print("BENCH_ci_smoke.json OK:",
-      {r["system"]: round(r["mops"], 2) for r in d["results"]}, "Mops")
+
+c = json.load(open("BENCH_ci_cache.json"))["results"][0]
+assert c["cache_hit_rate"] >= 0.9, c["cache_hit_rate"]
+assert 0 < c["reads_per_lookup"] <= 1.5, c["reads_per_lookup"]
+print("BENCH schema OK; cache smoke:",
+      f"hit_rate={c['cache_hit_rate']:.3f}",
+      f"reads/lookup={c['reads_per_lookup']:.2f}")
 EOF

@@ -1,8 +1,8 @@
 """Sherman core: a write-optimized distributed B+Tree on a disaggregated
 node pool, adapted from RDMA one-sided verbs to batched JAX execution."""
-from repro.core.api import (FG_PLUS, SHERMAN, Features, OracleIndex,
-                            ShermanIndex, TreeConfig)
+from repro.core.api import (FG_PLUS, SHERMAN, Features, IndexCache,
+                            OracleIndex, ShermanIndex, TreeConfig)
 from repro.core.tree import TreeState, bulkload
 
 __all__ = ["ShermanIndex", "TreeConfig", "TreeState", "bulkload",
-           "Features", "FG_PLUS", "SHERMAN", "OracleIndex"]
+           "Features", "FG_PLUS", "SHERMAN", "OracleIndex", "IndexCache"]

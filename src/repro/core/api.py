@@ -1,10 +1,16 @@
 """Public API of the Sherman index.
 
-``ShermanIndex`` is the component a database (or the serving stack in
-:mod:`repro.launch.serve`) embeds: batched insert/delete/lookup/range with
-the paper's full write path, plus per-phase netsim pricing so every paper
-metric (throughput, latency percentiles, round trips, write bytes, retries)
-falls out of normal use.
+``ShermanIndex`` is the component a database (or a serving stack such as
+the paged-KV integration in ``examples/serve_paged.py``) embeds: batched
+insert/delete/lookup/range with the paper's full write path, plus per-phase
+netsim pricing so every paper metric (throughput, latency percentiles,
+round trips, write bytes, retries) falls out of normal use.
+
+Reads route through the functional CS-side index cache
+(:mod:`repro.core.cache`): a cache-hit lookup costs one remote leaf read,
+a stale hit pays the B-link chase, and a miss retraverses — all three
+outcomes are counted (``cache_hits``/``cache_misses``/``cache_stale``) and
+priced.
 """
 from __future__ import annotations
 
@@ -16,14 +22,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import netsim, ops, write
-from repro.core.netsim import (FG_PLUS, SHERMAN, Features, IndexCacheSim,
-                               NetConfig)
+from repro.core.cache import IndexCache
+from repro.core.netsim import FG_PLUS, SHERMAN, Features, NetConfig
 from repro.core.ref import OracleIndex
 from repro.core.tree import TreeConfig, TreeState, bulkload, empty_state
 from repro.core.write import RepairQueue
 
 __all__ = ["ShermanIndex", "TreeConfig", "Features", "FG_PLUS", "SHERMAN",
-           "OracleIndex"]
+           "OracleIndex", "IndexCache"]
 
 
 @functools.partial(jax.jit, static_argnums=(0,))
@@ -42,6 +48,11 @@ def _jit_range(cfg, st, lo, count, max_leaves):
     return ops.range_batch(cfg, st, lo, count, max_leaves)
 
 
+@functools.partial(jax.jit, static_argnums=(0, 3, 4))
+def _jit_range_cached(cfg, st, lo, count, max_leaves, cache_image):
+    return ops.range_batch(cfg, st, lo, count, max_leaves, cache_image)
+
+
 @functools.partial(jax.jit, static_argnums=(0,))
 def _jit_repair(cfg, st, repair):
     st, repair, ni, nr = write.run_repair(cfg, st, repair, iters=2)
@@ -54,17 +65,25 @@ class ShermanIndex:
     def __init__(self, cfg: TreeConfig, state: TreeState,
                  features: Features = SHERMAN,
                  net: Optional[NetConfig] = None,
-                 cache_bytes: int = 64 << 20):
+                 cache_bytes: int = 64 << 20,
+                 cache_levels: Optional[int] = None,
+                 cache_sync_every: int = 8,
+                 cache_chase_hops: int = 4,
+                 cache_kernel: Optional[str] = None):
         self.cfg = cfg
         self.state = state
         self.features = features
         self.net = net or NetConfig()
-        self.cache = IndexCacheSim(cache_bytes, cfg.node_bytes)
+        self.cache = IndexCache(cfg, cache_bytes, levels=cache_levels,
+                                chase_hops=cache_chase_hops,
+                                sync_every=cache_sync_every,
+                                kernel_mode=cache_kernel)
         self.counters = {
             "phases": 0, "write_ops": 0, "read_ops": 0, "leaf_splits": 0,
             "internal_splits": 0, "root_splits": 0, "split_same_ms": 0,
             "cas_msgs": 0, "handovers": 0, "msgs": 0, "bytes": 0.0,
-            "sim_time_s": 0.0,
+            "sim_time_s": 0.0, "cache_hits": 0, "cache_misses": 0,
+            "cache_stale": 0, "lookup_ops": 0, "lookup_rtts": 0,
         }
         self.latencies_write: list[np.ndarray] = []
         self.latencies_read: list[np.ndarray] = []
@@ -88,16 +107,26 @@ class ShermanIndex:
         per = max(1, -(-n // self.cfg.n_cs))
         return (jnp.arange(n, dtype=jnp.int32) // per) % self.cfg.n_cs
 
-    def _price_write(self, stats: write.WriteStats, active, leaf_np):
+    def _price_cache_maintenance(self):
+        """Charge the image fills / version sweeps the cache performed
+        since the last drain (whole-node reads + small version reads)."""
+        node_rd, small_rd = self.cache.take_maintenance()
+        if not (node_rd or small_rd):
+            return
+        b = node_rd * self.cfg.node_bytes + small_rd * self.net.small_io_bytes
+        self.counters["msgs"] += node_rd + small_rd
+        self.counters["bytes"] += b
+        self.counters["sim_time_s"] += netsim._msg_time(
+            node_rd + small_rd, b, self.cfg.n_ms, self.net)
+
+    def _price_write(self, stats: write.WriteStats, active, hits):
         height = int(self.state.height)
-        parents = leaf_np  # cache keyed by leaf's level-1 parent ~ leaf id
-        hits = self.cache.access(parents)
         sd = dict(
             active=np.asarray(active),
             local_rank=np.asarray(stats.local_rank),
             node_rank=np.asarray(stats.node_rank),
             node_size=np.asarray(stats.node_size),
-            split_lane=np.zeros(len(leaf_np), bool),
+            split_lane=np.asarray(stats.split_mask),
             cache_hit=hits, height=height,
         )
         priced = netsim.price_write_phase(
@@ -131,13 +160,22 @@ class ShermanIndex:
         active = jnp.ones((n,), bool)
         if self._repair.valid.shape[0] != n:
             self._carry_repair(n)
+        # the writes' traversal leg routes through the CS cache like a read;
+        # probe once per batch (retry phases reuse the same routing)
+        if self.cache.enabled:
+            route_hits = self.cache.route_hits(self.state, keys)
+        else:
+            route_hits = np.zeros(n, bool)
         for _ in range(max_phases):
             self.state, done, stats, self._repair = _jit_write_phase(
                 self.cfg, self.state, keys, vals, is_del, active, cs,
                 self._repair)
-            self._price_write(stats, np.asarray(active),
-                              np.asarray(stats.leaf))
+            self._price_write(stats, np.asarray(active), route_hits)
             self.counters["write_ops"] += int(np.asarray(active).sum())
+            # invalidation hook: feed this phase's split outputs to the cache
+            self.cache.note_splits(int(stats.n_leaf_splits),
+                                   int(stats.n_internal_splits),
+                                   int(stats.n_root_splits), self.state)
             active = active & ~done
             if not bool(jnp.any(active)):
                 break
@@ -145,6 +183,7 @@ class ShermanIndex:
             raise RuntimeError("write batch did not converge; "
                                "pool exhausted or max_phases too low")
         self.drain_repairs()
+        self._price_cache_maintenance()
 
     def _carry_repair(self, n: int):
         old = self._repair
@@ -165,6 +204,7 @@ class ShermanIndex:
                 self.cfg, self.state, self._repair)
             self.counters["internal_splits"] += int(ni)
             self.counters["root_splits"] += int(nr)
+            self.cache.note_splits(0, int(ni), int(nr), self.state)
         if bool(jnp.any(self._repair.valid)):
             raise RuntimeError("repair queue did not drain")
 
@@ -178,17 +218,34 @@ class ShermanIndex:
     # -- read ops ----------------------------------------------------------
     def lookup(self, keys):
         keys = jnp.asarray(keys, jnp.int32)
-        res = _jit_lookup(self.cfg, self.state, keys)
-        hits = self.cache.access(np.asarray(res.leaf))
-        priced = netsim.price_read_phase(
-            dict(active=np.ones(keys.shape[0], bool), cache_hit=hits,
-                 height=int(self.state.height)),
-            self.features, self.net, self.cfg.n_ms, self.cfg.node_bytes)
+        n = keys.shape[0]
+        c = self.counters
+        if self.cache.enabled:
+            res, cst = self.cache.lookup(self.state, keys)
+            c["cache_hits"] += int((cst["hit"] & ~cst["stale"]).sum())
+            c["cache_misses"] += int((~cst["hit"]).sum())
+            c["cache_stale"] += int(cst["stale"].sum())
+            sd = dict(active=np.ones(n, bool),
+                      cache_hit=cst["hit"] & ~cst["stale"],
+                      remote_reads=cst["remote_reads"],
+                      height=int(self.state.height))
+        else:
+            res = _jit_lookup(self.cfg, self.state, keys)
+            c["cache_misses"] += n
+            sd = dict(active=np.ones(n, bool),
+                      cache_hit=np.zeros(n, bool),
+                      height=int(self.state.height))
+        priced = netsim.price_read_phase(sd, self.features, self.net,
+                                         self.cfg.n_ms, self.cfg.node_bytes)
         self.latencies_read.append(priced["latency_s"])
-        self.counters["read_ops"] += keys.shape[0]
-        self.counters["msgs"] += int(np.asarray(priced["rtts"]).sum())
-        self.counters["bytes"] += priced["bytes"]
-        self.counters["sim_time_s"] += priced["makespan_s"]
+        rtts = int(np.asarray(priced["rtts"]).sum())
+        c["read_ops"] += n
+        c["lookup_ops"] += n
+        c["lookup_rtts"] += rtts
+        c["msgs"] += rtts
+        c["bytes"] += priced["bytes"]
+        c["sim_time_s"] += priced["makespan_s"]
+        self._price_cache_maintenance()
         return np.asarray(res.value), np.asarray(res.found)
 
     def range(self, lo, count: int, max_leaves: Optional[int] = None):
@@ -197,16 +254,27 @@ class ShermanIndex:
             # Leaves may be sparse (deletes don't merge — §5.3 notes the same
             # partial-occupancy artifact), so scan generously.
             max_leaves = max(4, count)
-        res = _jit_range(self.cfg, self.state, lo, count, max_leaves)
+        # the scan's initial descent consults the CS cache like a lookup
+        if self.cache.enabled:
+            res = _jit_range_cached(self.cfg, self.state, lo, count,
+                                    max_leaves,
+                                    self.cache.image(self.state))
+            hits = np.asarray(res.start_hit)
+            self.cache.note_hits(hits)
+        else:
+            res = _jit_range(self.cfg, self.state, lo, count, max_leaves)
+            hits = np.zeros(lo.shape[0], bool)
         n_leaves = np.asarray(res.leaves_read)
         priced = netsim.price_read_phase(
-            dict(active=np.ones(lo.shape[0], bool),
-                 cache_hit=np.ones(lo.shape[0], bool),
+            dict(active=np.ones(lo.shape[0], bool), cache_hit=hits,
                  retries=n_leaves - 1, height=int(self.state.height)),
             self.features, self.net, self.cfg.n_ms, self.cfg.node_bytes)
         self.latencies_read.append(priced["latency_s"])
         self.counters["read_ops"] += lo.shape[0]
+        self.counters["msgs"] += int(np.asarray(priced["rtts"]).sum())
+        self.counters["bytes"] += priced["bytes"]
         self.counters["sim_time_s"] += priced["makespan_s"]
+        self._price_cache_maintenance()
         return (np.asarray(res.keys), np.asarray(res.vals),
                 np.asarray(res.n))
 

@@ -112,8 +112,22 @@ def leaf_lookup(st: TreeState, leaf: jax.Array, qkeys: jax.Array
                         hops=jnp.zeros_like(leaf))
 
 
-def lookup_batch(cfg: TreeConfig, st: TreeState, qkeys: jax.Array
-                 ) -> LookupResult:
+def lookup_batch(cfg: TreeConfig, st: TreeState, qkeys: jax.Array,
+                 cache_image: dict | None = None, chase_hops: int = 4,
+                 kernel_mode: str = "ref") -> LookupResult:
+    """Batched point lookup.
+
+    With a ``cache_image`` (see :mod:`repro.core.cache`) the descent runs
+    locally through the replicated CS cache and ``hops`` reports the
+    *remote* reads a real CS would issue (1 on a clean hit); without one
+    it is the plain root-to-leaf traversal.
+    """
+    if cache_image is not None:
+        from repro.core.cache import cached_lookup
+        res, _ = cached_lookup(cfg, st, cache_image, qkeys,
+                               chase_hops=chase_hops,
+                               kernel_mode=kernel_mode)
+        return res
     tr = traverse(cfg, st, qkeys)
     res = leaf_lookup(st, tr.leaf, qkeys)
     return res._replace(hops=tr.hops)
@@ -125,17 +139,31 @@ class RangeResult(NamedTuple):
     n: jax.Array             # [B] number of valid results
     leaves_read: jax.Array   # [B] leaves fetched (netsim)
     consistent: jax.Array    # [B] bool
+    start_hit: jax.Array     # [B] bool — initial descent was a cache hit
 
 
 def range_batch(cfg: TreeConfig, st: TreeState, lo: jax.Array, count: int,
-                max_leaves: int) -> RangeResult:
+                max_leaves: int,
+                cache_image: dict | None = None) -> RangeResult:
     """Fetch the first ``count`` pairs with key >= lo for each lane.
 
     Mirrors the paper §4.4: the client issues parallel RDMA_READs along the
-    sibling chain and version-checks each leaf like a lookup.
+    sibling chain and version-checks each leaf like a lookup.  With a
+    ``cache_image`` the initial descent runs through the CS cache
+    (``start_hit``); a stale start leaf is harmless — the sibling chain
+    walks right past it, exactly the B-link argument.
     """
     b = lo.shape[0]
     tr = traverse(cfg, st, lo)
+    start = tr.leaf
+    start_hit = jnp.zeros((b,), bool)
+    if cache_image is not None:
+        from repro.core.cache import descend_image, leaf_sound
+        leaf0, hit, _ = descend_image(cache_image, lo, cfg.max_height)
+        sound = hit & leaf_sound(st, leaf0, lo)   # a split start falls back
+        start = jnp.where(sound, leaf0, start)
+        start_hit = sound
+    tr = tr._replace(leaf=start)
 
     def chain(leaf, _):
         nxt = st.sibling[leaf]
@@ -154,8 +182,9 @@ def range_batch(cfg: TreeConfig, st: TreeState, lo: jax.Array, count: int,
     valid = ((nk != EMPTY_KEY) & (nk >= lo[:, None, None])
              & entry_ok & node_ok[:, :, None] & ~dup[:, :, None])
     f = cfg.fanout
-    flat_k = jnp.where(valid, nk, jnp.int32(2**31 - 1)).reshape(b, -1)
-    flat_v = nv.reshape(b, -1)
+    flat = (b, leaves.shape[1] * f)      # explicit: survives empty batches
+    flat_k = jnp.where(valid, nk, jnp.int32(2**31 - 1)).reshape(flat)
+    flat_v = nv.reshape(flat)
     order = jnp.argsort(flat_k, axis=1)
     sk = jnp.take_along_axis(flat_k, order[:, :count], axis=1)
     sv = jnp.take_along_axis(flat_v, order[:, :count], axis=1)
@@ -166,4 +195,5 @@ def range_batch(cfg: TreeConfig, st: TreeState, lo: jax.Array, count: int,
         n=jnp.sum(got.astype(jnp.int32), axis=1),
         leaves_read=jnp.sum((~dup).astype(jnp.int32), axis=1),
         consistent=jnp.all(node_ok | dup, axis=1),
+        start_hit=start_hit,
     )

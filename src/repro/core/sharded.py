@@ -31,7 +31,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import write as W
 from repro.core.ops import leaf_lookup
-from repro.core.tree import (EMPTY_KEY, NULL_PTR, TreeConfig, TreeState)
+from repro.core.tree import NULL_PTR, TreeConfig, TreeState
 
 MEM_AXIS = "model"       # the mem pool shards over the TP/model axis
 DATA_AXIS = "data"
@@ -101,6 +101,7 @@ def _remote_read_rows(cfg: TreeConfig, local: TreeState, rows: jax.Array):
         keys=serve(local.keys), vals=serve(local.vals),
         fev=serve(local.fev), rev=serve(local.rev),
         fnv=serve(local.fnv), rnv=serve(local.rnv),
+        level=serve(local.level.astype(jnp.int32)),
         free=serve(local.free_bit.astype(jnp.int8)).astype(bool))
 
 
@@ -117,23 +118,9 @@ def _routed_lookup_body(cfg: TreeConfig, st_local: TreeState, cache: dict,
     one routed remote read of the target leaves (the paper's cache-hit
     fast path: a single RDMA_READ)."""
     # --- cache traversal (replicated, no communication) ---
-    node = jnp.broadcast_to(cache["root"], qkeys.shape).astype(jnp.int32)
-    crows = cache["rows"]                       # [C] global row ids
-    ckeys = cache["keys"]                       # [C, F]
-    cvals = cache["vals"]
-    clevel = cache["level"]
-    for _ in range(depth):
-        pos = jnp.searchsorted(crows, node)
-        pos = jnp.clip(pos, 0, crows.shape[0] - 1)
-        hit = crows[pos] == node
-        nk = ckeys[pos]
-        nv = cvals[pos]
-        lv = clevel[pos].astype(jnp.int32)
-        valid = nk != EMPTY_KEY
-        le = valid & (nk <= qkeys[:, None])
-        j = jnp.maximum(jnp.sum(le.astype(jnp.int32), axis=1) - 1, 0)
-        child = jnp.take_along_axis(nv, j[:, None], axis=1)[:, 0]
-        node = jnp.where(hit & (lv > 0), child, node)
+    from repro.core.cache import descend_image
+    # miss lanes resume from the frontier (first uncached node on the path)
+    node, hit, _ = descend_image(cache, qkeys, max(depth, cfg.max_height))
 
     # --- remote leaf read: all_gather requests + psum responses ---
     img = _remote_read_rows(cfg, st_local, node)
@@ -142,7 +129,11 @@ def _routed_lookup_body(cfg: TreeConfig, st_local: TreeState, cache: dict,
     found = jnp.any(eq, axis=1)
     slot = jnp.argmax(eq, axis=1)
     take = lambda a: jnp.take_along_axis(a, slot[:, None], axis=1)[:, 0]
-    node_ok = (img["fnv"] == img["rnv"]) & ~img["free"]
+    # a fetched non-leaf (cache too shallow / evicted level-1 node) must
+    # not answer: its separators alias real keys and its "values" are
+    # child pointers
+    node_ok = (img["fnv"] == img["rnv"]) & ~img["free"] & \
+        (img["level"] == 0)
     entry_ok = take(img["fev"]) == take(img["rev"])
     consistent = node_ok & (entry_ok | ~found)
     value = jnp.where(found & consistent, take(nv), NULL_PTR)
@@ -152,33 +143,22 @@ def _routed_lookup_body(cfg: TreeConfig, st_local: TreeState, cache: dict,
 
 def build_cache(cfg: TreeConfig, st: TreeState, depth: int = 2,
                 max_rows: int | None = None) -> dict:
-    """Replicated CS-side image of the top ``depth`` tree levels
-    (the paper's type-2 cache: root + one level below, always cached)."""
+    """Replicated CS-side image of the top ``depth`` tree levels — a thin
+    wrapper over :func:`repro.core.cache.fill_image`, the single source of
+    image construction (paper §4.2.3)."""
+    from repro.core.cache import fill_image
     if max_rows is None:
         max_rows = 1 + cfg.fanout ** (depth - 1) + cfg.fanout ** depth
-    level = np.asarray(st.level)
-    height = int(st.height)
-    top = level >= max(1, height - depth)
-    rows = np.nonzero(top)[0][:max_rows].astype(np.int32)
-    pad = max_rows - rows.shape[0]
-    rows_p = np.concatenate([rows, np.full(pad, 2**31 - 1, np.int32)])
-    order = np.argsort(rows_p)
-    rows_p = rows_p[order]
-    safe = np.clip(rows_p, 0, cfg.n_nodes - 1)
-    return dict(
-        rows=jnp.asarray(rows_p),
-        keys=jnp.asarray(np.asarray(st.keys)[safe]),
-        vals=jnp.asarray(np.asarray(st.vals)[safe]),
-        level=jnp.asarray(np.asarray(st.level)[safe]),
-        root=st.root,
-    )
+    image, _ = fill_image(cfg, st, levels=depth, max_rows=max_rows)
+    return image
 
 
 def routed_lookup_fn(cfg: TreeConfig, mesh: Mesh, depth: int = 2):
     """Build the shard_map'd routed lookup: keys sharded over data, pool
     sharded over mem, cache replicated."""
     specs = tree_pspecs(cfg)
-    cache_specs = dict(rows=P(), keys=P(), vals=P(), level=P(), root=P())
+    cache_specs = dict(rows=P(), keys=P(), vals=P(), level=P(), valid=P(),
+                       fnv=P(), root=P())
 
     @functools.partial(
         _shard_map, mesh=mesh,

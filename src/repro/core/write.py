@@ -119,6 +119,10 @@ class WriteStats(NamedTuple):
     cs_rank: jax.Array            # [B] serialization rank of own CS group
     lock_cycles: jax.Array        # [B] remote lock cycles of own group
     local_head: jax.Array         # [B] head of local group
+    split_mask: jax.Array         # [B] lane performed a leaf split (netsim
+                                  #    split-lane pricing; with the split
+                                  #    counts below, the cache-invalidation
+                                  #    hook input)
     n_leaf_splits: jax.Array      # []
     n_internal_splits: jax.Array  # []
     n_root_splits: jax.Array      # []
@@ -445,6 +449,7 @@ def write_phase(cfg: TreeConfig, st: TreeState, keys, vals, is_delete,
     n_same_ms = jnp.int32(0)
     n_internal = jnp.int32(0)
     n_root = jnp.int32(0)
+    split_mask = jnp.zeros((b,), bool)
 
     # -- split rounds for overflowing leaves --
     for _ in range(split_rounds):
@@ -454,6 +459,7 @@ def write_phase(cfg: TreeConfig, st: TreeState, keys, vals, is_delete,
         st, sep, new_row, did, same = _split_nodes(cfg, st, tr2.leaf, rep)
         n_leaf_splits += jnp.sum(did.astype(jnp.int32))
         n_same_ms += jnp.sum(same.astype(jnp.int32))
+        split_mask = split_mask | did
         # enqueue separators in the repair queue (free slots)
         free = ~repair.valid
         new_rank, _ = _rank_by(jnp.zeros_like(sep), did, 1)
@@ -495,6 +501,7 @@ def write_phase(cfg: TreeConfig, st: TreeState, keys, vals, is_delete,
         node_size=groups.node_size, node_rank=groups.node_rank,
         cs_rank=groups.cs_rank, lock_cycles=groups.lock_cycles,
         local_head=groups.local_head,
+        split_mask=split_mask,
         n_leaf_splits=n_leaf_splits, n_internal_splits=n_internal,
         n_root_splits=n_root, n_split_same_ms=n_same_ms,
         hocl_remote_cas=lock_stats["hocl_remote_cas"],

@@ -38,6 +38,12 @@ def main(argv: Optional[list] = None) -> str:
                     help="override load-phase record count")
     ap.add_argument("--scan-len", type=int, default=None,
                     help="override entries per scan op")
+    ap.add_argument("--cache-bytes", type=int, default=64 << 20,
+                    help="CS-side index cache budget in bytes per CS "
+                         "(0 disables the cache; default 64 MiB)")
+    ap.add_argument("--cache-levels", type=int, default=None,
+                    help="cache only the top N internal levels "
+                         "(default: every internal level that fits)")
     ap.add_argument("--seed", type=int, default=1)
     ap.add_argument("--quick", action="store_true",
                     help=f"CI-sized run ({QUICK})")
@@ -78,13 +84,21 @@ def main(argv: Optional[list] = None) -> str:
             ap.error(f"unknown system {s!r}; "
                      f"known: {', '.join(sorted(engine.SYSTEMS))}")
 
-    results = engine.run_systems(spec, systems, seed=args.seed)
+    if args.cache_bytes < 0:
+        ap.error(f"--cache-bytes must be >= 0, got {args.cache_bytes}")
+    if args.cache_levels is not None and args.cache_levels <= 0:
+        ap.error(f"--cache-levels must be positive, got {args.cache_levels}")
+
+    results = engine.run_systems(spec, systems, seed=args.seed,
+                                 cache_bytes=args.cache_bytes,
+                                 cache_levels=args.cache_levels)
     print(f"{'system':16s} {'Mops':>8s} {'p50us':>8s} {'p99us':>10s} "
-          f"{'rtt50':>6s} {'wr.B':>7s}")
+          f"{'rtt50':>6s} {'wr.B':>7s} {'hit%':>6s} {'rd/l':>5s}")
     for r in results:
         print(f"{r.system:16s} {r.mops:8.2f} {r.p50_us:8.1f} "
               f"{r.p99_us:10.1f} {r.rtt_p50:6.0f} "
-              f"{r.write_bytes_median:7.0f}")
+              f"{r.write_bytes_median:7.0f} {100 * r.cache_hit_rate:6.1f} "
+              f"{r.reads_per_lookup:5.2f}")
 
     path = args.json or f"BENCH_{spec.name.replace('-', '_')}.json"
     engine.write_json(path, spec, results)

@@ -55,6 +55,12 @@ class RunResult:
     rtt_p99: float = 0.0
     write_bytes_median: float = 0.0
     op_counts: dict = dataclasses.field(default_factory=dict)
+    # CS-side index cache outcome of this run (repro.core.cache):
+    cache_hits: int = 0          # lookups served by a clean cache hit
+    cache_misses: int = 0        # descents that left the cached set
+    cache_stale: int = 0         # hits recovered via the stale path
+    cache_hit_rate: float = 0.0  # hits / (hits + misses + stale)
+    reads_per_lookup: float = 0.0  # mean remote node reads per point lookup
 
     def to_dict(self) -> dict:
         return _pyify(dataclasses.asdict(self))
@@ -75,7 +81,8 @@ def _pyify(x):
 
 def build_index(features: Features, cfg: TreeConfig = DEFAULT_CFG, *,
                 records: int = 60_000, keyspace: int = KEYSPACE,
-                cache_bytes: int = 64 << 20, seed: int = 0,
+                cache_bytes: int = 64 << 20,
+                cache_levels: Optional[int] = None, seed: int = 0,
                 fill: float = 0.8) -> ShermanIndex:
     """Load phase: bulk-load ``records`` records (insertion ranks
     ``0..records`` scrambled across the keyspace, YCSB-style)."""
@@ -83,7 +90,8 @@ def build_index(features: Features, cfg: TreeConfig = DEFAULT_CFG, *,
     keys = scramble(np.arange(records, dtype=np.int64), keyspace)
     vals = rng.integers(0, VAL_MASK, size=records)
     return ShermanIndex.build(cfg, keys, vals, fill=fill, features=features,
-                              cache_bytes=cache_bytes)
+                              cache_bytes=cache_bytes,
+                              cache_levels=cache_levels)
 
 
 def live_records(idx: ShermanIndex) -> int:
@@ -175,6 +183,8 @@ def run_workload(idx: ShermanIndex, spec: WorkloadSpec, *, seed: int = 1,
         return float(np.percentile(a, p)) * 1e6 if a.size else 0.0
 
     delta = {k: idx.counters[k] - c0.get(k, 0) for k in idx.counters}
+    cache_total = (delta["cache_hits"] + delta["cache_misses"]
+                   + delta["cache_stale"])
     return RunResult(
         mops=done / sim_s / 1e6 if sim_s else float("inf"),
         p50_us=pct(lat, 50), p90_us=pct(lat, 90), p99_us=pct(lat, 99),
@@ -184,13 +194,20 @@ def run_workload(idx: ShermanIndex, spec: WorkloadSpec, *, seed: int = 1,
         rtt_p50=float(np.percentile(rtts, 50)),
         rtt_p99=float(np.percentile(rtts, 99)),
         write_bytes_median=float(np.median(wb)),
-        op_counts={k: v for k, v in op_counts.items() if v})
+        op_counts={k: v for k, v in op_counts.items() if v},
+        cache_hits=delta["cache_hits"], cache_misses=delta["cache_misses"],
+        cache_stale=delta["cache_stale"],
+        cache_hit_rate=(delta["cache_hits"] / cache_total
+                        if cache_total else 0.0),
+        reads_per_lookup=(delta["lookup_rtts"] / delta["lookup_ops"]
+                          if delta["lookup_ops"] else 0.0))
 
 
 def run_systems(spec: WorkloadSpec, systems: Sequence[str] = ("sherman",
                                                               "fg+"),
                 cfg: TreeConfig = DEFAULT_CFG, *, keyspace: int = KEYSPACE,
                 cache_bytes: int = 64 << 20,
+                cache_levels: Optional[int] = None,
                 seed: int = 1) -> list[RunResult]:
     """Run one spec against several named systems (fresh index each)."""
     out = []
@@ -201,7 +218,8 @@ def run_systems(spec: WorkloadSpec, systems: Sequence[str] = ("sherman",
             raise KeyError(f"unknown system {name!r}; "
                            f"known: {', '.join(sorted(SYSTEMS))}") from None
         idx = build_index(feat, cfg, records=spec.load_records,
-                          keyspace=keyspace, cache_bytes=cache_bytes)
+                          keyspace=keyspace, cache_bytes=cache_bytes,
+                          cache_levels=cache_levels)
         out.append(run_workload(idx, spec, seed=seed, keyspace=keyspace,
                                 system=name))
     return out

@@ -157,6 +157,43 @@ def fig_cache_sweep(n_ops=4_096, records=20_000):
     return rows
 
 
+def ablation_sweep(n_ops=4_096, records=20_000,
+                   json_path="BENCH_ablation.json"):
+    """Fig. 10/11 technique ladder on a write-heavy YCSB-A batch, replayed
+    through the verb-trace plane, plus the single-feature negations of
+    full Sherman (`sherman-nocombine`, `sherman-flat`).
+
+    Writes ``BENCH_ablation.json`` — the seed of the repo's perf
+    trajectory: the ladder order, per-system Mops/p99, and the verb/
+    doorbell totals that make the combine/hierarchy wins auditable.
+    """
+    import dataclasses as _dc
+
+    from repro.workloads import get_preset, run_systems, write_json
+    rows = []
+    ladder = [nm.lower() for nm, _ in ABLATION_LADDER]
+    systems = ladder + ["sherman-nocombine", "sherman-flat"]
+    spec = get_preset("ycsb-a", ops=n_ops, load_records=records)
+    results = run_systems(spec, systems)
+    # the ladder's last rung *is* full Sherman — alias it instead of
+    # paying a second identical build + run
+    sherman = _dc.replace(results[len(ladder) - 1], system="sherman")
+    results.insert(len(ladder), sherman)
+    print("\n== Ablation sweep (YCSB-A, verb plane) ==")
+    print(f"{'system':18s} {'Mops':>8s} {'p99us':>10s} {'verbs':>9s} "
+          f"{'dbells':>9s} {'saved':>7s}")
+    for r in results:
+        print(f"{r.system:18s} {r.mops:8.2f} {r.p99_us:10.1f} "
+              f"{r.verbs:9d} {r.doorbells:9d} {r.doorbells_saved:7d}")
+        rows.append(csv_row(
+            f"ablation/{r.system}", r.p50_us,
+            f"mops={r.mops:.3f};p99us={r.p99_us:.1f};"
+            f"doorbells={r.doorbells};saved={r.doorbells_saved}"))
+    write_json(json_path, spec, results, extra={"ladder": ladder})
+    print(f"wrote {json_path}")
+    return rows
+
+
 def fig16_hocl(n_locks=1_024, n_threads=1_024):
     """Fig 16: HOCL microbenchmark — lock/unlock on a skewed pattern.
 

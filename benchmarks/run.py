@@ -17,7 +17,7 @@ def main(argv=None) -> None:
                     help="smaller op counts (CI)")
     ap.add_argument("--only", default="",
                     help="comma list: table1,fig10,fig11,fig12,fig13,"
-                         "fig14,fig15,fig16,cache")
+                         "fig14,fig15,fig16,cache,ablation")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write rows to PATH (default "
                          "BENCH_paper_figs.json with --json '')")
@@ -51,6 +51,11 @@ def main(argv=None) -> None:
         rows += F.fig16_hocl()
     if want("cache"):
         rows += F.fig_cache_sweep(n_ops=max(1_024, n // 2))
+    if want("ablation"):
+        # verb-plane ladder; always writes BENCH_ablation.json (the perf
+        # trajectory seed), independent of --json
+        rows += F.ablation_sweep(n_ops=max(1_024, n // 2),
+                                 records=8_000 if args.quick else 20_000)
 
     print("\n# CSV")
     for r in rows:

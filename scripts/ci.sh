@@ -11,6 +11,36 @@ python -m pytest -x -q
 echo "== benchmark smoke (Table 1, quick) =="
 python benchmarks/run.py --quick --only table1
 
+echo "== verb-trace conservation check =="
+python -m pytest -q tests/test_netsim_trace.py -k \
+    "conservation or cycle_masks or doorbell"
+
+echo "== ablation sweep (verb plane, writes BENCH_ablation.json) =="
+python benchmarks/run.py --quick --only ablation
+python - <<'EOF'
+import json, math
+
+d = json.load(open("BENCH_ablation.json"))
+res = {r["system"]: r for r in d["results"]}
+ladder = d["ladder"]
+mops = [res[s]["mops"] for s in ladder]
+assert all(math.isfinite(m) and m > 0 for m in mops), mops
+assert all(b >= 0.98 * a for a, b in zip(mops, mops[1:])), \
+    ("ablation ladder regressed", list(zip(ladder, mops)))
+sh = res["sherman"]
+assert sh["doorbells"] < res["sherman-nocombine"]["doorbells"], \
+    (sh["doorbells"], res["sherman-nocombine"]["doorbells"])
+assert math.isfinite(sh["p99_us"]) and 0 < sh["p99_us"] < \
+    res["sherman-flat"]["p99_us"], \
+    (sh["p99_us"], res["sherman-flat"]["p99_us"])
+print("ablation OK:", " -> ".join(f"{s}={m:.2f}" for s, m in
+                                  zip(ladder, mops)),
+      f"| doorbells {sh['doorbells']} < "
+      f"{res['sherman-nocombine']['doorbells']}",
+      f"| p99 {sh['p99_us']:.1f}us < "
+      f"{res['sherman-flat']['p99_us']:.1f}us")
+EOF
+
 echo "== docstring cross-references =="
 python scripts/check_xrefs.py
 
@@ -35,12 +65,15 @@ RESULT_FIELDS = {"mops", "p50_us", "p90_us", "p99_us", "counters", "system",
                  "write_p50_us", "write_p99_us", "rtt_p50", "rtt_p99",
                  "write_bytes_median", "op_counts", "cache_hits",
                  "cache_misses", "cache_stale", "cache_hit_rate",
-                 "reads_per_lookup"}
-COUNTER_KEYS = {"phases", "write_ops", "read_ops", "leaf_splits",
+                 "reads_per_lookup", "verbs", "doorbells",
+                 "doorbells_saved", "retried_ops"}
+COUNTER_KEYS = {"phases", "write_ops", "retried_ops", "read_ops",
+                "leaf_splits",
                 "internal_splits", "root_splits", "split_same_ms",
                 "cas_msgs", "handovers", "msgs", "bytes", "sim_time_s",
                 "cache_hits", "cache_misses", "cache_stale", "lookup_ops",
-                "lookup_rtts"}
+                "lookup_rtts", "verbs", "doorbells", "hocl_cas",
+                "flat_cas"}
 
 for path in ("BENCH_ci_smoke.json", "BENCH_ci_cache.json"):
     d = json.load(open(path))

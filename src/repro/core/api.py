@@ -59,6 +59,29 @@ def _jit_repair(cfg, st, repair):
     return st, repair, ni, nr
 
 
+def write_stats_dict(stats: write.WriteStats, active, route_hits,
+                     height: int) -> dict:
+    """Numpy view of one write phase's per-lane structure — the verb
+    plane's input (netsim.price_write_phase / verbs.write_phase_trace).
+    Shared with the trace-conservation tests so the two stay in sync."""
+    return dict(
+        active=np.asarray(active),
+        leaf=np.asarray(stats.leaf),
+        local_rank=np.asarray(stats.local_rank),
+        node_rank=np.asarray(stats.node_rank),
+        node_size=np.asarray(stats.node_size),
+        cycle_head=np.asarray(stats.cycle_head),
+        chain_end=np.asarray(stats.chain_end),
+        split_lane=np.asarray(stats.split_mask),
+        split_same_ms=np.asarray(stats.split_same_ms),
+        split_new_row=np.asarray(stats.split_new_row),
+        cache_hit=np.asarray(route_hits),
+        height=int(height),
+        hocl_remote_cas=int(stats.hocl_remote_cas),
+        flat_remote_cas=int(stats.flat_remote_cas),
+    )
+
+
 class ShermanIndex:
     """A write-optimized ordered index over a disaggregated node pool."""
 
@@ -79,11 +102,13 @@ class ShermanIndex:
                                 sync_every=cache_sync_every,
                                 kernel_mode=cache_kernel)
         self.counters = {
-            "phases": 0, "write_ops": 0, "read_ops": 0, "leaf_splits": 0,
+            "phases": 0, "write_ops": 0, "retried_ops": 0, "read_ops": 0,
+            "leaf_splits": 0,
             "internal_splits": 0, "root_splits": 0, "split_same_ms": 0,
             "cas_msgs": 0, "handovers": 0, "msgs": 0, "bytes": 0.0,
             "sim_time_s": 0.0, "cache_hits": 0, "cache_misses": 0,
             "cache_stale": 0, "lookup_ops": 0, "lookup_rtts": 0,
+            "verbs": 0, "doorbells": 0, "hocl_cas": 0, "flat_cas": 0,
         }
         self.latencies_write: list[np.ndarray] = []
         self.latencies_read: list[np.ndarray] = []
@@ -109,38 +134,37 @@ class ShermanIndex:
 
     def _price_cache_maintenance(self):
         """Charge the image fills / version sweeps the cache performed
-        since the last drain (whole-node reads + small version reads)."""
+        since the last drain by replaying their MAINT/SYNC verbs."""
         node_rd, small_rd = self.cache.take_maintenance()
         if not (node_rd or small_rd):
             return
-        b = node_rd * self.cfg.node_bytes + small_rd * self.net.small_io_bytes
-        self.counters["msgs"] += node_rd + small_rd
-        self.counters["bytes"] += b
-        self.counters["sim_time_s"] += netsim._msg_time(
-            node_rd + small_rd, b, self.cfg.n_ms, self.net)
+        sim = netsim.price_maintenance(node_rd, small_rd, self.features,
+                                       self.net, self.cfg,
+                                       rows_ms=self.cache.rows_ms())
+        self._charge(sim)
+
+    def _charge(self, priced: dict):
+        """Accumulate one simulated trace's totals into the counters."""
+        c = self.counters
+        c["msgs"] += priced["msgs"]
+        c["verbs"] += priced["verbs"]
+        c["doorbells"] += priced["doorbells"]
+        c["bytes"] += priced["bytes"]
+        c["sim_time_s"] += priced["makespan_s"]
 
     def _price_write(self, stats: write.WriteStats, active, hits):
-        height = int(self.state.height)
-        sd = dict(
-            active=np.asarray(active),
-            local_rank=np.asarray(stats.local_rank),
-            node_rank=np.asarray(stats.node_rank),
-            node_size=np.asarray(stats.node_size),
-            split_lane=np.asarray(stats.split_mask),
-            cache_hit=hits, height=height,
-        )
-        priced = netsim.price_write_phase(
-            sd, self.features, self.net, self.cfg.n_ms,
-            self.cfg.entry_bytes, self.cfg.node_bytes)
+        sd = write_stats_dict(stats, active, hits, int(self.state.height))
+        priced = netsim.price_write_phase(sd, self.features, self.net,
+                                          self.cfg)
         self.latencies_write.append(priced["latency_s"])
         self.rtts_write.append(priced["rtts"])
         self.write_bytes.append(priced["write_bytes"])
+        self._charge(priced)
         c = self.counters
         c["phases"] += 1
         c["cas_msgs"] += priced["cas_msgs"]
-        c["msgs"] += priced["msgs"]
-        c["bytes"] += priced["bytes"]
-        c["sim_time_s"] += priced["makespan_s"]
+        c["hocl_cas"] += sd["hocl_remote_cas"]
+        c["flat_cas"] += sd["flat_remote_cas"]
         c["leaf_splits"] += int(stats.n_leaf_splits)
         c["internal_splits"] += int(stats.n_internal_splits)
         c["root_splits"] += int(stats.n_root_splits)
@@ -166,12 +190,16 @@ class ShermanIndex:
             route_hits = self.cache.route_hits(self.state, keys)
         else:
             route_hits = np.zeros(n, bool)
-        for _ in range(max_phases):
+        # each client op counts once; lanes resubmitted by later phases
+        # are tracked separately so throughput isn't inflated
+        self.counters["write_ops"] += n
+        for phase_no in range(max_phases):
             self.state, done, stats, self._repair = _jit_write_phase(
                 self.cfg, self.state, keys, vals, is_del, active, cs,
                 self._repair)
             self._price_write(stats, np.asarray(active), route_hits)
-            self.counters["write_ops"] += int(np.asarray(active).sum())
+            if phase_no:
+                self.counters["retried_ops"] += int(np.asarray(active).sum())
             # invalidation hook: feed this phase's split outputs to the cache
             self.cache.note_splits(int(stats.n_leaf_splits),
                                    int(stats.n_internal_splits),
@@ -228,23 +256,22 @@ class ShermanIndex:
             sd = dict(active=np.ones(n, bool),
                       cache_hit=cst["hit"] & ~cst["stale"],
                       remote_reads=cst["remote_reads"],
+                      leaf=np.asarray(res.leaf),
                       height=int(self.state.height))
         else:
             res = _jit_lookup(self.cfg, self.state, keys)
             c["cache_misses"] += n
             sd = dict(active=np.ones(n, bool),
                       cache_hit=np.zeros(n, bool),
+                      leaf=np.asarray(res.leaf),
                       height=int(self.state.height))
         priced = netsim.price_read_phase(sd, self.features, self.net,
-                                         self.cfg.n_ms, self.cfg.node_bytes)
+                                         self.cfg)
         self.latencies_read.append(priced["latency_s"])
-        rtts = int(np.asarray(priced["rtts"]).sum())
         c["read_ops"] += n
         c["lookup_ops"] += n
-        c["lookup_rtts"] += rtts
-        c["msgs"] += rtts
-        c["bytes"] += priced["bytes"]
-        c["sim_time_s"] += priced["makespan_s"]
+        c["lookup_rtts"] += int(np.asarray(priced["rtts"]).sum())
+        self._charge(priced)
         self._price_cache_maintenance()
         return np.asarray(res.value), np.asarray(res.found)
 
@@ -267,13 +294,13 @@ class ShermanIndex:
         n_leaves = np.asarray(res.leaves_read)
         priced = netsim.price_read_phase(
             dict(active=np.ones(lo.shape[0], bool), cache_hit=hits,
-                 retries=n_leaves - 1, height=int(self.state.height)),
-            self.features, self.net, self.cfg.n_ms, self.cfg.node_bytes)
+                 retries=np.maximum(n_leaves - 1, 0),  # empty scans read 0
+                 leaf=np.asarray(res.start_leaf), scan=True,
+                 height=int(self.state.height)),
+            self.features, self.net, self.cfg)
         self.latencies_read.append(priced["latency_s"])
         self.counters["read_ops"] += lo.shape[0]
-        self.counters["msgs"] += int(np.asarray(priced["rtts"]).sum())
-        self.counters["bytes"] += priced["bytes"]
-        self.counters["sim_time_s"] += priced["makespan_s"]
+        self._charge(priced)
         self._price_cache_maintenance()
         return (np.asarray(res.keys), np.asarray(res.vals),
                 np.asarray(res.n))

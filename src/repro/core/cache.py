@@ -443,11 +443,18 @@ class IndexCache:
     def take_maintenance(self) -> tuple[int, int]:
         """Drain the un-priced maintenance traffic since the last call:
         ``(node_reads, small_reads)`` for image fills and version sweeps.
-        The API turns these into netsim messages/bytes."""
+        The API replays these as MAINT/SYNC verbs through netsim."""
         f0, s0 = self._maint_taken
         f1, s1 = self.counters.fill_reads, self.counters.sync_reads
         self._maint_taken = (f1, s1)
         return f1 - f0, s1 - s0
+
+    def rows_ms(self) -> np.ndarray:
+        """Owning MS of every filled cache row — the verb plane spreads
+        maintenance reads over these instead of a blind round-robin."""
+        if self._image is None:
+            return np.zeros(0, np.int32)
+        return self.cfg.ms_of(self._rows[self._filled]).astype(np.int32)
 
     # -- reporting ---------------------------------------------------------
     @property

@@ -41,6 +41,10 @@ class Groups(NamedTuple):
     local_rank: jax.Array        # [B] FIFO rank inside the (cs, node) group
     local_size: jax.Array        # [B] size of own (cs, node) group
     local_head: jax.Array        # [B] bool — first lane of local group
+    cycle_head: jax.Array        # [B] bool — starts a handover cycle, i.e.
+                                 #    issues the remote LOCK CAS (verb plane)
+    chain_end: jax.Array         # [B] bool — ends a handover chain, i.e.
+                                 #    issues the remote UNLOCK (verb plane)
     node_rank: jax.Array         # [B] rank inside the node group
     node_size: jax.Array         # [B] size of own node group
     node_head: jax.Array         # [B] bool — first lane of node group
@@ -111,6 +115,12 @@ def group_by_node(cfg: TreeConfig, node: jax.Array, cs: jax.Array,
     # every MAX_DEPTH handovers (paper lines 24-28).
     k = local_size_g[local_gid]
     cycles_s = (k + cfg.handover_max) // (cfg.handover_max + 1)
+    # verb-plane masks: per handover cycle, one lane CASes (its head) and
+    # one lane releases (its end — the depth cap or the last of the queue);
+    # their counts per group both equal ``cycles_s``
+    cyc_pos = local_rank_s % (cfg.handover_max + 1)
+    cycle_head_s = cyc_pos == 0
+    chain_end_s = (cyc_pos == cfg.handover_max) | (local_rank_s == k - 1)
 
     def unsort(x):
         return x[inv]
@@ -121,6 +131,7 @@ def group_by_node(cfg: TreeConfig, node: jax.Array, cs: jax.Array,
         perm=perm, inv=inv,
         local_rank=unsort(local_rank_s), local_size=unsort(k),
         local_head=unsort(new_local),
+        cycle_head=unsort(cycle_head_s), chain_end=unsort(chain_end_s),
         node_rank=unsort(node_rank_s),
         node_size=unsort(node_size_g[node_gid]),
         node_head=unsort(new_node),

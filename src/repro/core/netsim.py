@@ -1,29 +1,42 @@
-"""Network cost model: prices structural phase counters in RDMA terms.
+"""netsim — a discrete-event RDMA simulator over verb traces.
 
 The container has no RDMA fabric, so — exactly like the paper explains its
-own numbers in §5.5 — performance is *derived* from measured structural
-metrics (round trips, message counts, write bytes, conflict-group shapes).
-The functional plane (what the tree does) is real JAX execution; this module
-only attaches times to it.
+own numbers in §5.5 — performance is *derived* from the functional plane.
+What changed from the original counter-pricing model: the functional plane
+now emits a structured **verb trace** (:mod:`repro.core.verbs` — one record
+per READ/WRITE/CAS a real CS would post, with target MS, payload, doorbell
+grouping and dependency links), and this module replays that trace in an
+event loop against per-MS resources.  Per-op latency, tail percentiles and
+phase makespan *fall out of the replay* instead of closed-form formulas.
 
-Constants (paper sources):
-  * RTT ≈ 2 µs for small one-sided verbs at 100 Gbps (§2.2)
-  * RDMA_WRITE rate: >50 Mops for IO ≤ 128 B, bandwidth-bound above (Fig. 3)
-  * on-chip RDMA_CAS ≈ 110 Mops — no PCIe at MS side (§4.3)
-  * host-memory RDMA_CAS needs 2 PCIe transactions; conflicting commands on
-    the same NIC bucket serialize on that PCIe time (§3.2.2, Fig. 2)
+Resources (paper sources):
 
-Queueing model (documented in docs/DESIGN.md §5): ops contending for one node
-lock serialize FIFO under HOCL (wait = rank × hold).  Without the local
-lock hierarchy, waiters spin with random success, burning one CAS per hold
-interval — so CAS traffic on a hot lock grows ~quadratically with the group
-size, which is precisely the Fig. 2 collapse.
+  * RTT ≈ 2 µs for small one-sided verbs at 100 Gbps (§2.2);
+  * per-MS **NIC message unit**: >50 Mops for IO ≤ 128 B, bandwidth-bound
+    above (Fig. 3) — every verb occupies it FIFO;
+  * per-MS **atomic unit**: CAS additionally serialize here — NIC on-chip
+    ≈ 110 Mops (§4.3) vs. ~2 PCIe transactions ≈ 0.9 µs for host-memory
+    atomics (§3.2.2, Fig. 2).  The quadratic spin-CAS load of a hot lock
+    clogging the PCIe-cost atomic unit *is* the Fig. 2 collapse.
+
+Sherman's feature toggles carry **no closed-form constants here**; they are
+
+  * ``combine``      → :func:`repro.core.verbs.combine_doorbells`
+  * ``hierarchical`` → :func:`repro.core.verbs.hierarchical_locks`
+  * ``twolevel``     → :func:`repro.core.verbs.twolevel_writes`
+  * ``onchip``       → the atomic-unit service-time *resource parameter*.
+
+Event-loop semantics and the verb taxonomy are documented in
+docs/DESIGN.md §10.
 """
 from __future__ import annotations
 
 import dataclasses
+import heapq
 
 import numpy as np
+
+from repro.core import verbs as V
 
 
 @dataclasses.dataclass(frozen=True)
@@ -62,132 +75,174 @@ class NetConfig:
     handover_max: int = 4
 
 
-def _msg_time(n_msgs, total_bytes, n_ms, net: NetConfig):
-    """NIC occupancy of a message stream spread over n_ms servers."""
-    iops = n_msgs / (n_ms * net.nic_iops_small)
-    bw = total_bytes / (n_ms * net.nic_bw_Bps)
-    return max(iops, bw)
+# --------------------------------------------------------------------------
+# the event loop
+# --------------------------------------------------------------------------
 
+def simulate(trace: V.VerbTrace, net: NetConfig, n_ms: int,
+             onchip: bool) -> dict:
+    """Replay one phase's verb trace against per-MS resources.
 
-def price_write_phase(stats: dict, feat: Features, net: NetConfig,
-                      n_ms: int, entry_bytes: int, node_bytes: int):
-    """Price one write phase.
+    Every verb is posted when its gates (``dep``/``dep2`` completions and
+    its ``at`` floor) allow, occupies the target MS's NIC message unit
+    FIFO (``max(1/iops, bytes/bw)``), CAS additionally serialize on the
+    MS's atomic unit, and the client observes completion one RTT after
+    service.  Verbs sharing a doorbell inherit the head's gates (set by
+    the combine transformation), so they post together and per-MS FIFO
+    order keeps in-order delivery.
 
-    ``stats`` holds numpy views of WriteStats.  Returns a dict with per-op
-    latency array (seconds), makespan, throughput, plus internal metrics
-    (round trips per op, write bytes per op, CAS retries) matching the
-    paper's §5.5 reporting.
+    Returns per-lane latency (completion of the lane's last verb — the
+    wave starts at t=0), the phase makespan, and trace totals.
     """
-    act = np.asarray(stats["active"], bool)
-    n = int(act.sum())
+    n = trace.n_verbs
+    n_lanes = trace.n_lanes
     if n == 0:
-        return dict(latency_s=np.zeros(0), makespan_s=0.0, mops=0.0,
-                    rtts=np.zeros(0), write_bytes=np.zeros(0),
-                    cas_msgs=0, msgs=0, bytes=0)
+        return dict(latency_s=np.zeros(n_lanes), makespan_s=0.0,
+                    rtts=np.zeros(n_lanes, np.int64),
+                    write_bytes=np.zeros(n_lanes),
+                    msgs=0, verbs=0, bytes=0.0, cas_msgs=0, doorbells=0)
 
-    local_rank = np.asarray(stats["local_rank"])[act]
-    node_rank = np.asarray(stats["node_rank"])[act]
-    node_size = np.asarray(stats["node_size"])[act]
-    split_lane = np.asarray(stats["split_lane"], bool)[act]
-    cache_hit = np.asarray(stats["cache_hit"], bool)[act]
-    height = int(stats["height"])
-    m = float(np.max(node_size, initial=1))          # hottest-node fan-in
+    svc = np.maximum(1.0 / net.nic_iops_small,
+                     trace.nbytes / net.nic_bw_Bps).tolist()
+    cas_s = net.cas_onchip_s if onchip else net.cas_pcie_s
+    rtt = net.rtt_s
+    kind = trace.kind.tolist()
+    ms = trace.ms.tolist()
+    at = trace.at.tolist()
+    dep = trace.dep.tolist()
+    dep2 = trace.dep2.tolist()
 
-    # ---- per-op round trips (paper §3.2.1 / §5.5.2) ----
-    read_rtts = np.where(cache_hit, 1, height)      # leaf read (+ traversal)
+    npend = ((trace.dep >= 0).astype(np.int8)
+             + (trace.dep2 >= 0).astype(np.int8))
+    children: list[list[int]] = [[] for _ in range(n)]
+    for col in (trace.dep, trace.dep2):
+        for i in np.nonzero(col >= 0)[0].tolist():
+            children[col[i]].append(i)
+    npend = npend.tolist()
+
+    heap = [(at[i], i) for i in np.nonzero(
+        (trace.dep < 0) & (trace.dep2 < 0))[0].tolist()]
+    heapq.heapify(heap)
+    nic_free = [0.0] * n_ms
+    atomic_free = [0.0] * n_ms
+    comp = [0.0] * n
+    push, pop = heapq.heappush, heapq.heappop
+    while heap:
+        t, i = pop(heap)
+        m = ms[i]
+        s = t if t > nic_free[m] else nic_free[m]
+        d = s + svc[i]
+        nic_free[m] = d
+        if kind[i] == V.CAS:
+            a = d if d > atomic_free[m] else atomic_free[m]
+            d = a + cas_s
+            atomic_free[m] = d
+        d += rtt
+        comp[i] = d
+        for c in children[i]:
+            npend[c] -= 1
+            if not npend[c]:
+                r = at[c]
+                j = dep[c]
+                if j >= 0 and comp[j] > r:
+                    r = comp[j]
+                j = dep2[c]
+                if j >= 0 and comp[j] > r:
+                    r = comp[j]
+                push(heap, (r, c))
+
+    comp = np.asarray(comp)
+    lat = np.zeros(n_lanes)
+    lm = trace.lane >= 0
+    np.maximum.at(lat, trace.lane[lm], comp[lm])
+    return dict(latency_s=lat, makespan_s=float(comp.max()),
+                rtts=trace.per_lane_doorbells(),
+                write_bytes=trace.per_lane_write_bytes(),
+                msgs=n, verbs=n, bytes=trace.total_bytes,
+                cas_msgs=trace.n_cas, doorbells=trace.n_doorbells)
+
+
+def transformed_write_trace(stats: dict, feat: Features, net: NetConfig,
+                            cfg) -> V.VerbTrace:
+    """Canonical write trace + the feature transformations, in order
+    (lock-stream rewrite reassembles, so it runs first)."""
+    tr = V.write_phase_trace(stats, cfg, net.rtt_s)
+    if tr.n_verbs == 0:
+        return tr
     if feat.hierarchical:
-        # group head acquires; handover recipients skip the remote acquire,
-        # with a fresh acquire every MAX_DEPTH+1 ops (paper lines 24-28)
-        lock_rtts = (local_rank % (net.handover_max + 1) == 0).astype(int)
-    else:
-        lock_rtts = np.ones(n, int)
-    write_rtts = 1 if feat.combine else 2           # write-back [+ unlock]
-    rtts = read_rtts + lock_rtts + write_rtts
-    # splits: sibling + parent updates; same-MS sibling rides the combined
-    # command list (§4.5), priced at phase level below
-    rtts = rtts + np.where(split_lane, 2, 0)
-
-    # ---- lock plane (the Fig. 2 physics) ----
-    # critical section: read + write(+unlock) after acquiring the lock
-    hold_s = (1 + write_rtts) * net.rtt_s
-    cas_service = net.cas_onchip_s if feat.onchip else net.cas_pcie_s
-    if feat.hierarchical:
-        # FIFO via the LLT wait queue: one remote CAS per lock cycle; the
-        # queue makes waits deterministic (fairness => tight tail)
-        attempts = (local_rank % (net.handover_max + 1) == 0).astype(
-            np.float64)
-        wait_s = node_rank * hold_s
-        # CAS pressure on the hottest lock: one per handover cycle
-        hot_cas = np.ceil(m / (net.handover_max + 1))
-    else:
-        # spinning: every waiter retries once per hold interval until it
-        # wins => op at rank r burns ~r*hold/rtt CAS (paper §3.2.2);
-        # NO fairness: stragglers wait ~2x their rank (random winner)
-        attempts = 1 + node_rank * (hold_s / net.rtt_s)
-        tail = node_rank >= 0.8 * np.maximum(node_size, 1)
-        wait_s = node_rank * (1.0 + tail) * hold_s
-        hot_cas = m + (hold_s / net.rtt_s) * m * m / 2.0
-    # failed CAS also serialize on the NIC's per-bucket atomic unit; with
-    # host-memory atomics each one occupies ~2 PCIe transactions (§3.2.2)
-    hot_atomic_s = hot_cas * cas_service
-    wait_s = wait_s + np.minimum(node_rank, 1) * hot_atomic_s \
-        * (0.0 if feat.hierarchical else 1.0)
-    cas_msgs = int(attempts.sum())
-
-    # ---- bytes (two-level versions => entry-granular write-back) ----
-    wr_bytes = np.where(split_lane, 2 * node_bytes,
-                        entry_bytes if feat.twolevel else node_bytes)
-    rd_bytes = read_rtts * node_bytes
-    total_bytes = float(wr_bytes.sum() + rd_bytes.sum()) \
-        + cas_msgs * net.small_io_bytes
-    msgs = int(rtts.sum()) + cas_msgs
-
-    # ---- latency & makespan ----
-    latency = rtts * net.rtt_s + wait_s + \
-        np.where(wr_bytes > net.small_io_bytes,
-                 wr_bytes / net.nic_bw_Bps, 0.0)
-    makespan = max(
-        _msg_time(msgs, total_bytes, n_ms, net),   # NIC occupancy
-        m * hold_s,                                # hottest node serializes
-        hot_atomic_s,                              # hottest lock bucket
-        float(np.median(latency)),                 # pipeline floor
-    )
-    return dict(latency_s=latency, makespan_s=makespan,
-                mops=n / makespan / 1e6, rtts=rtts,
-                write_bytes=wr_bytes, cas_msgs=cas_msgs, msgs=msgs,
-                bytes=total_bytes)
+        tr = V.hierarchical_locks(tr)
+    if feat.twolevel:
+        tr = V.twolevel_writes(tr)
+    if feat.combine:
+        tr = V.combine_doorbells(tr)
+    return tr
 
 
-def price_read_phase(stats: dict, feat: Features, net: NetConfig,
-                     n_ms: int, node_bytes: int):
-    """Price a lookup phase: 1 read RTT on cache hit + version retries.
+# --------------------------------------------------------------------------
+# phase pricing (the api.py entry points)
+# --------------------------------------------------------------------------
+
+def price_write_phase(stats: dict, feat: Features, net: NetConfig, cfg):
+    """Price one write phase by verb-trace replay.
+
+    ``stats`` holds numpy views of WriteStats (see
+    :func:`repro.core.api.write_stats_dict`); ``cfg`` is the TreeConfig
+    (MS layout + wire sizes).  Returns the per-op latency array, phase
+    makespan, throughput, and trace totals (verbs, doorbells, bytes,
+    CAS), matching the paper's §5.5 reporting.
+    """
+    tr = transformed_write_trace(stats, feat, net, cfg)
+    sim = simulate(tr, net, cfg.n_ms, feat.onchip)
+    n = tr.n_lanes
+    sim["mops"] = n / sim["makespan_s"] / 1e6 if sim["makespan_s"] else 0.0
+    return sim
+
+
+def price_read_phase(stats: dict, feat: Features, net: NetConfig, cfg):
+    """Price a lookup/scan phase: sequential READ chains per lane.
 
     When the caller measured the reads directly (the functional index
-    cache reports per-lane ``remote_reads``), that count is priced as-is;
-    otherwise round trips are derived from ``cache_hit``/``height``.
+    cache reports per-lane ``remote_reads``), that count is replayed
+    as-is; otherwise it derives from ``cache_hit``/``height``.  Version
+    ``retries`` (e.g. extra leaves of a scan) extend the chain and are
+    clamped at zero — an empty scan still pays its initial descent.
     """
     act = np.asarray(stats["active"], bool)
     n = int(act.sum())
     if n == 0:
         return dict(latency_s=np.zeros(0), makespan_s=0.0, mops=0.0,
-                    rtts=np.zeros(0), bytes=0.0)
-    retries = np.asarray(stats["retries"])[act] if "retries" in stats \
-        else np.zeros(n)
+                    rtts=np.zeros(0, np.int64), msgs=0, verbs=0, bytes=0.0,
+                    cas_msgs=0, doorbells=0)
+    retries = np.maximum(np.asarray(stats["retries"])[act], 0) \
+        if "retries" in stats else np.zeros(n, np.int64)
     if "remote_reads" in stats:
-        rtts = np.asarray(stats["remote_reads"])[act] + retries
+        reads = np.asarray(stats["remote_reads"])[act] + retries
     else:
         cache_hit = np.asarray(stats["cache_hit"], bool)[act]
-        height = int(stats["height"])
-        rtts = np.where(cache_hit, 1, height) + retries
-    bytes_ = float(rtts.sum()) * node_bytes
-    latency = rtts * net.rtt_s + node_bytes / net.nic_bw_Bps
-    makespan = max(_msg_time(float(rtts.sum()), bytes_, n_ms, net),
-                   float(np.median(latency)))
-    return dict(latency_s=latency, makespan_s=makespan,
-                mops=n / makespan / 1e6, rtts=rtts, bytes=bytes_)
+        reads = np.where(cache_hit, 1, max(int(stats["height"]), 1)) \
+            + retries
+    if "leaf" in stats:
+        leaf_ms = cfg.ms_of(np.asarray(stats["leaf"])[act].astype(np.int64))
+    else:
+        leaf_ms = np.arange(n, dtype=np.int64) % cfg.n_ms
+    tr = V.read_phase_trace(reads, leaf_ms, cfg.n_ms, cfg.node_bytes,
+                            scan=bool(stats.get("scan", False)))
+    sim = simulate(tr, net, cfg.n_ms, feat.onchip)
+    sim["mops"] = n / sim["makespan_s"] / 1e6 if sim["makespan_s"] else 0.0
+    return sim
 
 
-# The byte-counting ``IndexCacheSim`` stub that used to live here was
-# replaced by the functional CS-side cache subsystem in
-# :mod:`repro.core.cache` (hits are exercised, not merely priced); this
-# module now only attaches costs to the hit/miss/stale counts it reports.
+def price_maintenance(node_reads: int, small_reads: int, feat: Features,
+                      net: NetConfig, cfg, rows_ms=None):
+    """Price the CS cache's background traffic (image fills + version
+    sweeps) by replaying its MAINT/SYNC read verbs."""
+    tr = V.maintenance_trace(node_reads, small_reads, cfg.n_ms,
+                             cfg.node_bytes, net.small_io_bytes,
+                             rows_ms=rows_ms)
+    return simulate(tr, net, cfg.n_ms, feat.onchip)
+
+
+# The closed-form counter pricing that used to live here (per-feature RTT
+# constants such as ``write_rtts = 1 if feat.combine else 2``) was replaced
+# by the verb-trace plane above; the byte-counting ``IndexCacheSim`` stub
+# before it lives on as the functional cache in :mod:`repro.core.cache`.

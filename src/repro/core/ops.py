@@ -140,6 +140,8 @@ class RangeResult(NamedTuple):
     leaves_read: jax.Array   # [B] leaves fetched (netsim)
     consistent: jax.Array    # [B] bool
     start_hit: jax.Array     # [B] bool — initial descent was a cache hit
+    start_leaf: jax.Array    # [B] first leaf of the scan (verb-plane MS
+                             #    targeting for the sibling-chain reads)
 
 
 def range_batch(cfg: TreeConfig, st: TreeState, lo: jax.Array, count: int,
@@ -196,4 +198,5 @@ def range_batch(cfg: TreeConfig, st: TreeState, lo: jax.Array, count: int,
         leaves_read=jnp.sum((~dup).astype(jnp.int32), axis=1),
         consistent=jnp.all(node_ok | dup, axis=1),
         start_hit=start_hit,
+        start_leaf=tr.leaf,
     )

@@ -119,10 +119,19 @@ class WriteStats(NamedTuple):
     cs_rank: jax.Array            # [B] serialization rank of own CS group
     lock_cycles: jax.Array        # [B] remote lock cycles of own group
     local_head: jax.Array         # [B] head of local group
+    cycle_head: jax.Array         # [B] lane issues the remote LOCK CAS
+                                  #    under HOCL (verb plane)
+    chain_end: jax.Array          # [B] lane issues the remote UNLOCK
+                                  #    under HOCL (verb plane)
     split_mask: jax.Array         # [B] lane performed a leaf split (netsim
                                   #    split-lane pricing; with the split
                                   #    counts below, the cache-invalidation
                                   #    hook input)
+    split_same_ms: jax.Array      # [B] lane's sibling landed on the same MS
+                                  #    (three-way command combination §4.5)
+    split_new_row: jax.Array      # [B] sibling row of the lane's split
+                                  #    (park_row when no split) — verb
+                                  #    plane targets the SIBLING write
     n_leaf_splits: jax.Array      # []
     n_internal_splits: jax.Array  # []
     n_root_splits: jax.Array      # []
@@ -148,6 +157,37 @@ class RepairQueue(NamedTuple):
             child=jnp.full((q,), NULL_PTR, jnp.int32),
             level=jnp.zeros((q,), jnp.int32),
             valid=jnp.zeros((q,), bool))
+
+
+def _enqueue_pending(pend: RepairQueue, sep: jax.Array, child: jax.Array,
+                     level: jax.Array, did: jax.Array) -> RepairQueue:
+    """Insert the ``did`` lanes' separators into the queue's free slots.
+
+    The r-th new entry (by lane order) lands in the r-th free slot;
+    entries beyond the free capacity are dropped, which is safe under the
+    B-link invariant — the half-split is rediscovered by a later
+    traversal.  Shared by the write phase's split rounds and the repair
+    cascade.
+    """
+    q = pend.sep.shape[0]
+    free = ~pend.valid
+    new_rank, _ = _rank_by(jnp.zeros_like(sep), did, 1)
+    cumfree = jnp.cumsum(free.astype(jnp.int32)) - free.astype(jnp.int32)
+    # index of the r-th free slot: first slot with cumfree == r
+    slot_of_rank = jax.ops.segment_min(
+        jnp.arange(q, dtype=jnp.int32),
+        jnp.where(free, cumfree, q), num_segments=q + 1)[:q]
+    can = did & (new_rank < jnp.sum(free.astype(jnp.int32)))
+    tgt = jnp.where(can, slot_of_rank[jnp.minimum(new_rank, q - 1)], q)
+    pad = lambda a, v: jnp.concatenate([a, jnp.array([v], a.dtype)])
+    return RepairQueue(
+        sep=pad(pend.sep, 0).at[tgt].set(jnp.where(can, sep, 0),
+                                         mode="drop")[:q],
+        child=pad(pend.child, 0).at[tgt].set(jnp.where(can, child, 0),
+                                             mode="drop")[:q],
+        level=pad(pend.level, 0).at[tgt].set(jnp.where(can, level, 0),
+                                             mode="drop")[:q],
+        valid=pad(pend.valid, False).at[tgt].set(can, mode="drop")[:q])
 
 
 # --------------------------------------------------------------------------
@@ -346,7 +386,6 @@ def run_repair(cfg, st: TreeState, pend: RepairQueue, iters: int = 2):
     """
     n_internal = jnp.int32(0)
     n_root = jnp.int32(0)
-    q = pend.sep.shape[0]
     for _ in range(iters):
         st, pend, rs = _root_split(cfg, st, pend)
         n_root = n_root + rs
@@ -363,34 +402,8 @@ def run_repair(cfg, st: TreeState, pend: RepairQueue, iters: int = 2):
         # slots of lanes that just completed (compaction via free slots)
         st, psep, pchild, did, _ = _split_nodes(cfg, st, parent, full)
         n_internal = n_internal + jnp.sum(did.astype(jnp.int32))
-        free_slot_rank, _ = _rank_by(jnp.zeros_like(pend.sep), ~pend.valid,
-                                     1)
-        new_rank, _ = _rank_by(jnp.zeros_like(psep), did, 1)
-        # place each new pending (ranked r) into the r-th free queue slot
-        free = ~pend.valid
-        cumfree = jnp.cumsum(free.astype(jnp.int32)) - free.astype(jnp.int32)
-        # target slot for new pending r: first slot with cumfree == r
-        # scatter via sort: build arrays of length q
-        tgt = jnp.full((q,), q, jnp.int32)  # park
-        # index of r-th free slot:
-        slot_of_rank = jax.ops.segment_min(
-            jnp.arange(q, dtype=jnp.int32),
-            jnp.where(free, cumfree, q),
-            num_segments=q + 1)[:q]
-        tgt = jnp.where(did, slot_of_rank[jnp.minimum(new_rank, q - 1)], q)
-        can = did & (new_rank < jnp.sum(free.astype(jnp.int32)))
-        tgt = jnp.where(can, tgt, q)
-        pad = lambda a, v: jnp.concatenate([a, jnp.array([v], a.dtype)])
-        sep_q = pad(pend.sep, 0).at[tgt].set(
-            jnp.where(can, psep, 0), mode="drop")[:q]
-        child_q = pad(pend.child, 0).at[tgt].set(
-            jnp.where(can, pchild, 0), mode="drop")[:q]
-        lvl_q = pad(pend.level, 0).at[tgt].set(
-            jnp.where(can, st.level[parent].astype(jnp.int32), 0),
-            mode="drop")[:q]
-        val_q = pad(pend.valid, False).at[tgt].set(can, mode="drop")[:q]
-        pend = RepairQueue(sep=sep_q, child=child_q, level=lvl_q,
-                           valid=pend.valid | val_q)
+        pend = _enqueue_pending(pend, psep, pchild,
+                                st.level[parent].astype(jnp.int32), did)
     return st, pend, n_internal, n_root
 
 
@@ -450,6 +463,8 @@ def write_phase(cfg: TreeConfig, st: TreeState, keys, vals, is_delete,
     n_internal = jnp.int32(0)
     n_root = jnp.int32(0)
     split_mask = jnp.zeros((b,), bool)
+    split_same = jnp.zeros((b,), bool)
+    split_row = jnp.full((b,), jnp.int32(cfg.park_row))
 
     # -- split rounds for overflowing leaves --
     for _ in range(split_rounds):
@@ -460,28 +475,11 @@ def write_phase(cfg: TreeConfig, st: TreeState, keys, vals, is_delete,
         n_leaf_splits += jnp.sum(did.astype(jnp.int32))
         n_same_ms += jnp.sum(same.astype(jnp.int32))
         split_mask = split_mask | did
+        split_same = split_same | same
+        split_row = jnp.where(did, new_row, split_row)
         # enqueue separators in the repair queue (free slots)
-        free = ~repair.valid
-        new_rank, _ = _rank_by(jnp.zeros_like(sep), did, 1)
-        cumfree = jnp.cumsum(free.astype(jnp.int32)) - free.astype(jnp.int32)
-        q = repair.sep.shape[0]
-        slot_of_rank = jax.ops.segment_min(
-            jnp.arange(q, dtype=jnp.int32),
-            jnp.where(free, cumfree, q), num_segments=q + 1)[:q]
-        can = did & (new_rank < jnp.sum(free.astype(jnp.int32)))
-        tgt = jnp.where(can, slot_of_rank[jnp.minimum(new_rank, q - 1)], q)
-        pad = lambda a, v: jnp.concatenate([a, jnp.array([v], a.dtype)])
-        repair = RepairQueue(
-            sep=pad(repair.sep, 0).at[tgt].set(jnp.where(can, sep, 0),
-                                               mode="drop")[:q],
-            child=pad(repair.child, 0).at[tgt].set(
-                jnp.where(can, new_row, 0), mode="drop")[:q],
-            level=pad(repair.level, 0).at[tgt].set(
-                jnp.where(can, st.level[new_row].astype(jnp.int32), 0),
-                mode="drop")[:q],
-            valid=pad(repair.valid, False).at[tgt].set(can,
-                                                       mode="drop")[:q],
-        )
+        repair = _enqueue_pending(repair, sep, new_row,
+                                  st.level[new_row].astype(jnp.int32), did)
         st, repair, ni, nr = run_repair(cfg, st, repair, iters=repair_iters)
         n_internal += ni
         n_root += nr
@@ -501,7 +499,9 @@ def write_phase(cfg: TreeConfig, st: TreeState, keys, vals, is_delete,
         node_size=groups.node_size, node_rank=groups.node_rank,
         cs_rank=groups.cs_rank, lock_cycles=groups.lock_cycles,
         local_head=groups.local_head,
+        cycle_head=groups.cycle_head, chain_end=groups.chain_end,
         split_mask=split_mask,
+        split_same_ms=split_same, split_new_row=split_row,
         n_leaf_splits=n_leaf_splits, n_internal_splits=n_internal,
         n_root_splits=n_root, n_split_same_ms=n_same_ms,
         hocl_remote_cas=lock_stats["hocl_remote_cas"],

@@ -26,11 +26,18 @@ DEFAULT_CFG = TreeConfig(n_ms=4, nodes_per_ms=4096, fanout=16,
 VAL_MASK = (1 << 30) - 1
 
 #: Named feature configurations runnable from the CLI / benchmarks:
-#: ``sherman``, ``fg+``, and the Fig. 10/11 ablation rungs
-#: (``+combine``, ``+on-chip``, ``+hierarchical``, ``+2-level ver``).
+#: ``sherman``, ``fg+``, the Fig. 10/11 ablation rungs (``+combine``,
+#: ``+on-chip``, ``+hierarchical``, ``+2-level ver``), plus single-feature
+#: negations of full Sherman for the verb-plane acceptance checks
+#: (``sherman-nocombine`` — doorbell merging off; ``sherman-flat`` — lock
+#: hierarchy off, every waiter spins).
 SYSTEMS: dict[str, Features] = {
     "sherman": SHERMAN,
     "fg+": FG_PLUS,
+    "sherman-nocombine": Features(combine=False, onchip=True,
+                                  hierarchical=True, twolevel=True),
+    "sherman-flat": Features(combine=True, onchip=True,
+                             hierarchical=False, twolevel=True),
     **{name.lower(): feat for name, feat in ABLATION_LADDER},
 }
 
@@ -61,6 +68,11 @@ class RunResult:
     cache_stale: int = 0         # hits recovered via the stale path
     cache_hit_rate: float = 0.0  # hits / (hits + misses + stale)
     reads_per_lookup: float = 0.0  # mean remote node reads per point lookup
+    # RDMA verb-trace plane (repro.core.verbs / netsim event loop):
+    verbs: int = 0               # one-sided verbs posted (READ/WRITE/CAS)
+    doorbells: int = 0           # doorbell rings (combined verbs share one)
+    doorbells_saved: int = 0     # rings saved by command combination
+    retried_ops: int = 0         # lanes resubmitted by later write phases
 
     def to_dict(self) -> dict:
         return _pyify(dataclasses.asdict(self))
@@ -200,7 +212,10 @@ def run_workload(idx: ShermanIndex, spec: WorkloadSpec, *, seed: int = 1,
         cache_hit_rate=(delta["cache_hits"] / cache_total
                         if cache_total else 0.0),
         reads_per_lookup=(delta["lookup_rtts"] / delta["lookup_ops"]
-                          if delta["lookup_ops"] else 0.0))
+                          if delta["lookup_ops"] else 0.0),
+        verbs=delta["verbs"], doorbells=delta["doorbells"],
+        doorbells_saved=delta["verbs"] - delta["doorbells"],
+        retried_ops=delta["retried_ops"])
 
 
 def run_systems(spec: WorkloadSpec, systems: Sequence[str] = ("sherman",

@@ -1,0 +1,211 @@
+"""The RDMA verb-trace plane: conservation between the functional plane's
+structural counters and the event simulator, feature toggles as pure trace
+transformations, event-loop semantics, and the ablation ladder."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import ShermanIndex, TreeConfig, netsim, verbs as V, write
+from repro.core.api import write_stats_dict
+from repro.core.netsim import (ABLATION_LADDER, FG_PLUS, SHERMAN, Features,
+                               NetConfig)
+from repro.core.tree import bulkload
+from repro.workloads import SYSTEMS, build_index, get_preset, run_systems
+
+CFG = TreeConfig(n_ms=2, nodes_per_ms=1024, fanout=8, n_locks_per_ms=512,
+                 max_height=6, n_cs=4)
+NET = NetConfig()
+TINY = dict(load_records=2_000, ops=256, batch=128)
+
+
+def _one_write_phase(n=96, seed=7):
+    """Run one raw write phase (hot keys + fresh keys => contention and
+    splits) and return its stats dict, the way api.py feeds netsim."""
+    rng = np.random.default_rng(seed)
+    base = rng.choice(20_000, size=600, replace=False)
+    st = bulkload(CFG, base, base)
+    hot = rng.integers(0, 40, size=n // 2)
+    new = rng.choice(np.setdiff1d(np.arange(20_000), base), size=n // 2,
+                     replace=False)
+    keys = jnp.asarray(np.concatenate([hot, new]), jnp.int32)
+    vals = jnp.ones_like(keys)
+    active = jnp.ones((n,), bool)
+    cs = jnp.asarray(np.arange(n) % CFG.n_cs, jnp.int32)
+    _, _, stats, _ = write.write_phase(CFG, st, keys, vals,
+                                       jnp.zeros((n,), bool), active, cs)
+    return write_stats_dict(stats, np.ones(n, bool), np.zeros(n, bool),
+                            int(st.height))
+
+
+def _expected_write_totals(sd, feat):
+    """Independent closed-form reconstruction of the verb stream from the
+    functional plane's structural counters (the conservation oracle)."""
+    act = np.asarray(sd["active"], bool)
+    n = int(act.sum())
+    height = max(int(sd["height"]), 1)
+    reads = int(np.where(np.asarray(sd["cache_hit"])[act], 1, height).sum())
+    splits = int(np.asarray(sd["split_lane"])[act].sum())
+    if feat.hierarchical:
+        cas = int(sd["hocl_remote_cas"])
+        unlocks = int(np.asarray(sd["chain_end"])[act].sum())
+    else:
+        cas = int(sd["flat_remote_cas"])       # lock CAS + spin retries
+        unlocks = n
+    msgs = reads + cas + n + 2 * splits + unlocks
+    nb, eb = CFG.node_bytes, CFG.entry_bytes
+    wb = splits * nb + (n - splits) * (eb if feat.twolevel else nb)
+    bytes_ = (reads * nb + wb + splits * (nb + eb)
+              + (cas + unlocks) * V.LOCK_BYTES)
+    return msgs, cas, bytes_
+
+
+@pytest.mark.parametrize("feat", [SHERMAN, FG_PLUS],
+                         ids=["sherman", "fg+"])
+def test_write_trace_conservation(feat):
+    """The event simulator's totals equal the functional plane's
+    structural counters — bytes and messages are conserved across the
+    plane boundary for both full Sherman and the FG+ baseline."""
+    sd = _one_write_phase()
+    priced = netsim.price_write_phase(sd, feat, NET, CFG)
+    msgs, cas, bytes_ = _expected_write_totals(sd, feat)
+    assert priced["msgs"] == priced["verbs"] == msgs
+    assert priced["cas_msgs"] == cas
+    assert priced["bytes"] == pytest.approx(bytes_)
+    assert priced["makespan_s"] > 0 and np.isfinite(priced["makespan_s"])
+    assert priced["latency_s"].shape[0] == int(
+        np.asarray(sd["active"]).sum())
+    assert np.isfinite(priced["latency_s"]).all()
+
+
+def test_hocl_cycle_masks_match_lock_counters():
+    """The verb plane's per-lane cycle masks agree with hocl's scalar
+    counters: #LOCK CAS == hocl_remote_cas, and every handover cycle has
+    exactly one head and one end."""
+    sd = _one_write_phase()
+    act = np.asarray(sd["active"], bool)
+    heads = int(np.asarray(sd["cycle_head"])[act].sum())
+    ends = int(np.asarray(sd["chain_end"])[act].sum())
+    assert heads == sd["hocl_remote_cas"]
+    assert ends == heads
+
+
+def test_combine_is_a_pure_doorbell_merge():
+    """§4.5: combining changes *when* verbs post, not what is posted —
+    verbs and bytes identical, doorbell rings strictly fewer."""
+    sd = _one_write_phase()
+    on = netsim.price_write_phase(sd, SHERMAN, NET, CFG)
+    off = netsim.price_write_phase(
+        sd, Features(combine=False, onchip=True, hierarchical=True,
+                     twolevel=True), NET, CFG)
+    assert on["verbs"] == off["verbs"]
+    assert on["bytes"] == pytest.approx(off["bytes"])
+    assert on["doorbells"] < off["doorbells"]
+    assert off["doorbells"] == off["verbs"]     # no merging without combine
+    assert on["makespan_s"] <= off["makespan_s"]
+
+
+def test_event_loop_doorbell_semantics():
+    """A dependent verb costs a full extra round trip; riding the same
+    doorbell (in-order delivery) removes it — the §4.5 mechanism itself,
+    checked at event-loop granularity."""
+    def two_writes(share_doorbell):
+        dep = np.array([-1, 0 if not share_doorbell else -1], np.int64)
+        return V.VerbTrace(
+            kind=np.full(2, V.WRITE, np.int8),
+            role=np.array([V.WRITEBACK, V.UNLOCK], np.int8),
+            ms=np.zeros(2, np.int32), nbytes=np.full(2, 16, np.int64),
+            lane=np.zeros(2, np.int32),
+            doorbell=np.array([0, 0 if share_doorbell else 1], np.int64),
+            dep=dep, dep2=np.full(2, -1, np.int64), at=np.zeros(2),
+            n_lanes=1)
+    chained = netsim.simulate(two_writes(False), NET, 1, True)
+    merged = netsim.simulate(two_writes(True), NET, 1, True)
+    assert chained["makespan_s"] > 1.9 * NET.rtt_s   # two sequential RTTs
+    assert merged["makespan_s"] < 1.5 * NET.rtt_s    # one ring, one RTT
+    assert merged["doorbells"] == 1 and chained["doorbells"] == 2
+
+
+def test_ablation_ladder_monotone_throughput():
+    """Fig. 10/11: each technique is non-regressive on a write-heavy
+    skewed YCSB-A batch (2% numerical slack)."""
+    spec = get_preset("ycsb-a", **TINY)
+    ladder = [nm.lower() for nm, _ in ABLATION_LADDER]
+    mops = [r.mops for r in run_systems(spec, ladder, CFG)]
+    assert all(np.isfinite(m) and m > 0 for m in mops)
+    for a, b in zip(mops, mops[1:]):
+        assert b >= 0.98 * a, (ladder, mops)
+
+
+def test_sherman_doorbells_and_tail_acceptance():
+    """The headline acceptance: Sherman posts strictly fewer doorbells
+    than combine=False and its simulated p99 is finite and degrades when
+    the lock hierarchy is disabled."""
+    spec = get_preset("ycsb-a", **TINY)
+    res = {r.system: r
+           for r in run_systems(spec, ("sherman", "sherman-nocombine",
+                                       "sherman-flat"), CFG)}
+    sh = res["sherman"]
+    assert sh.doorbells < res["sherman-nocombine"].doorbells
+    assert sh.verbs == sh.doorbells + sh.doorbells_saved
+    assert sh.doorbells_saved > 0
+    assert 0 < sh.p99_us < np.inf
+    assert res["sherman-flat"].p99_us > sh.p99_us
+
+
+def test_read_trace_conservation_without_cache():
+    """Cache off => every lookup replays exactly ``height`` TRAVERSE
+    reads; simulator messages match the functional read counters."""
+    rng = np.random.default_rng(3)
+    base = rng.choice(50_000, size=2_000, replace=False)
+    idx = ShermanIndex.build(CFG, base, base, cache_bytes=0)
+    n, height = 256, int(idx.state.height)
+    m0, r0 = idx.counters["msgs"], idx.counters["lookup_rtts"]
+    idx.lookup(base[:n].astype(np.int32))
+    assert idx.counters["msgs"] - m0 == n * height
+    assert idx.counters["lookup_rtts"] - r0 == n * height
+    assert idx.counters["doorbells"] == idx.counters["verbs"]  # reads never
+    # combine: the next address depends on the previous read (§4.5)
+
+
+def test_empty_scan_retries_clamped():
+    """Satellite: an empty scan must not price negative retries."""
+    idx = ShermanIndex.empty(CFG)
+    k, v, n = idx.range(np.asarray([123], np.int32), count=4)
+    assert int(n[0]) == 0
+    assert idx.counters["sim_time_s"] > 0          # still paid the descent
+    # direct: a negative retry count is clamped, not subtracted
+    priced = netsim.price_read_phase(
+        dict(active=np.ones(4, bool), cache_hit=np.zeros(4, bool),
+             retries=np.full(4, -1), leaf=np.zeros(4, np.int64), scan=True,
+             height=2),
+        SHERMAN, NET, CFG)
+    assert priced["msgs"] == 4 * 2
+    assert (np.asarray(priced["rtts"]) >= 1).all()
+
+
+def test_write_ops_counted_once_across_retry_phases():
+    """Satellite: resubmitted lanes no longer inflate the throughput
+    numerator — client ops count once, retries separately."""
+    cfg = TreeConfig(n_ms=2, nodes_per_ms=512, fanout=4, n_locks_per_ms=256,
+                     max_height=8, n_cs=2)
+    idx = ShermanIndex.build(cfg, np.arange(0, 640, 10), np.arange(64))
+    keys = np.arange(0, 256, 2).astype(np.int32)   # dense: forces splits
+    idx.insert(keys, keys)
+    assert idx.counters["write_ops"] == keys.size
+    assert idx.counters["retried_ops"] > 0
+    assert idx.counters["leaf_splits"] > 0
+    got, found = idx.lookup(keys)
+    assert found.all() and (got == keys).all()
+
+
+def test_run_result_reports_verb_plane(tmp_path):
+    """RunResult carries the verb/doorbell/combine-savings fields and they
+    serialize."""
+    import json
+    spec = get_preset("ycsb-a", **TINY)
+    idx = build_index(SYSTEMS["sherman"], CFG, records=spec.load_records)
+    from repro.workloads import run_workload
+    r = run_workload(idx, spec, system="sherman")
+    assert r.verbs > 0 and r.doorbells > 0
+    assert r.doorbells_saved == r.verbs - r.doorbells > 0
+    json.dumps(r.to_dict())

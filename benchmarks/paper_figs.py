@@ -194,6 +194,52 @@ def ablation_sweep(n_ops=4_096, records=20_000,
     return rows
 
 
+def scaling_sweep(client_counts=(8, 16, 32, 64), n_ops=512,
+                  records=8_000, json_path="BENCH_scaling.json",
+                  partitioned=False):
+    """Client-scaling sweep through the multi-CS cluster plane (§5 /
+    Fig. 13, now *simulated* rather than lane-labelled): for each client
+    count, a fleet of compute servers with private caches and lock
+    tables hammers the shared memory pool, and per-CS verb traces merge
+    into one contended timeline (DESIGN.md §11).
+
+    Writes ``BENCH_scaling.json`` — the cluster acceptance artifact: one
+    RunResult per (system, n_clients) with the per-CS breakdown and the
+    merged-trace conservation flag.  The headline curve is SHERMAN's
+    write-heavy advantage *growing* with client count while FG+'s atomic
+    unit saturates.
+    """
+    from repro.workloads import get_preset, run_cluster_systems, write_json
+    rows = []
+    systems = ("sherman", "fg+")
+    spec = get_preset("write-intensive", theta=0.99, ops=n_ops,
+                      load_records=records)
+    results = []
+    print("\n== Client scaling (cluster plane, write-intensive 0.99) ==")
+    print(f"{'clients':>8s} {'system':10s} {'Mops':>8s} {'p99us':>9s} "
+          f"{'stale':>6s} {'xCS':>5s} {'cons':>5s}")
+    for nc in client_counts:
+        for r in run_cluster_systems(spec, systems, n_clients=nc,
+                                     partitioned=partitioned):
+            stale = sum(p["cache_stale"] for p in r.per_cs)
+            print(f"{r.n_clients:8d} {r.system:10s} {r.mops:8.2f} "
+                  f"{r.p99_us:9.1f} {stale:6d} "
+                  f"{r.counters['cross_cs_conflicts']:5d} "
+                  f"{'OK' if r.conservation_ok else 'BAD':>5s}")
+            rows.append(csv_row(
+                f"scaling/{r.system}/{r.n_clients}", r.p50_us,
+                f"mops={r.mops:.3f};p99us={r.p99_us:.1f};"
+                f"conservation={r.conservation_ok}"))
+            results.append(r)
+    write_json(json_path, spec, results,
+               extra={"client_counts": [r.n_clients for r in
+                                        results[::len(systems)]],
+                      "systems": list(systems),
+                      "partitioned": partitioned})
+    print(f"wrote {json_path}")
+    return rows
+
+
 def fig16_hocl(n_locks=1_024, n_threads=1_024):
     """Fig 16: HOCL microbenchmark — lock/unlock on a skewed pattern.
 

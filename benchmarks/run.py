@@ -17,7 +17,7 @@ def main(argv=None) -> None:
                     help="smaller op counts (CI)")
     ap.add_argument("--only", default="",
                     help="comma list: table1,fig10,fig11,fig12,fig13,"
-                         "fig14,fig15,fig16,cache,ablation")
+                         "fig14,fig15,fig16,cache,ablation,scaling")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write rows to PATH (default "
                          "BENCH_paper_figs.json with --json '')")
@@ -56,6 +56,13 @@ def main(argv=None) -> None:
         # trajectory seed), independent of --json
         rows += F.ablation_sweep(n_ops=max(1_024, n // 2),
                                  records=8_000 if args.quick else 20_000)
+    if want("scaling"):
+        # multi-CS cluster plane; always writes BENCH_scaling.json (the
+        # client-scaling acceptance curve), independent of --json
+        rows += F.scaling_sweep(
+            client_counts=(8, 16, 32, 64),
+            n_ops=512 if args.quick else 2_048,
+            records=8_000 if args.quick else 20_000)
 
     print("\n# CSV")
     for r in rows:

@@ -41,6 +41,47 @@ print("ablation OK:", " -> ".join(f"{s}={m:.2f}" for s, m in
       f"{res['sherman-flat']['p99_us']:.1f}us")
 EOF
 
+echo "== cluster scaling sweep (writes BENCH_scaling.json) =="
+python benchmarks/run.py --quick --only scaling
+python - <<'EOF'
+import json, math
+
+d = json.load(open("BENCH_scaling.json"))
+systems = d["systems"]
+counts = d["client_counts"]
+assert len(counts) >= 4, ("need >= 4 client counts", counts)
+assert set(systems) == {"sherman", "fg+"}, systems
+by = {(r["system"], r["n_clients"]): r for r in d["results"]}
+assert len(by) == len(counts) * len(systems), "missing sweep points"
+for r in d["results"]:
+    # merged-trace verb conservation must hold at every sweep point
+    assert r["conservation_ok"], (r["system"], r["n_clients"])
+    assert math.isfinite(r["mops"]) and r["mops"] > 0
+    assert len(r["per_cs"]) >= 2, "cluster runs must report >= 2 CSs"
+    assert sum(p["ops"] for p in r["per_cs"]) >= r["n_ops"]
+
+ratios = [by[("sherman", n)]["mops"] / by[("fg+", n)]["mops"]
+          for n in counts]
+# SHERMAN >= FG+ write-heavy throughput at max clients, and the
+# advantage grows with client count
+assert ratios[-1] >= 1.0, ratios
+assert ratios[-1] > ratios[0] * 1.02, ("advantage must grow", ratios)
+# p99 tail is monotone in client count (queue depth) until saturation
+for s in systems:
+    p99 = [by[(s, n)]["p99_us"] for n in counts]
+    assert all(math.isfinite(p) and p > 0 for p in p99), (s, p99)
+    assert all(b >= 0.95 * a for a, b in zip(p99, p99[1:])), (s, p99)
+print("scaling OK:",
+      " ".join(f"{n}cl={r:.2f}x" for n, r in zip(counts, ratios)),
+      "| p99(sherman)",
+      "->".join(f"{by[('sherman', n)]['p99_us']:.1f}" for n in counts))
+EOF
+
+echo "== cluster CLI smoke (2 CS, write-intensive) =="
+python -m repro.workloads --preset write-intensive --quick \
+    --records 4000 --ops 256 --batch 128 --systems sherman \
+    --n-clients 2 --json BENCH_ci_cluster.json
+
 echo "== docstring cross-references =="
 python scripts/check_xrefs.py
 
@@ -55,7 +96,7 @@ python -m repro.workloads --preset ycsb-c --quick \
 
 echo "== BENCH json schema validation (docs/BENCHMARKS.md) =="
 python - <<'EOF'
-import json
+import json, math
 
 SPEC_FIELDS = {"name", "read", "insert", "update", "delete", "scan", "rmw",
                "distribution", "theta", "scan_len", "load_records", "ops",
@@ -66,7 +107,8 @@ RESULT_FIELDS = {"mops", "p50_us", "p90_us", "p99_us", "counters", "system",
                  "write_bytes_median", "op_counts", "cache_hits",
                  "cache_misses", "cache_stale", "cache_hit_rate",
                  "reads_per_lookup", "verbs", "doorbells",
-                 "doorbells_saved", "retried_ops"}
+                 "doorbells_saved", "retried_ops", "n_clients", "rounds",
+                 "per_cs", "conservation_ok"}
 COUNTER_KEYS = {"phases", "write_ops", "retried_ops", "read_ops",
                 "leaf_splits",
                 "internal_splits", "root_splits", "split_same_ms",
@@ -74,8 +116,11 @@ COUNTER_KEYS = {"phases", "write_ops", "retried_ops", "read_ops",
                 "cache_hits", "cache_misses", "cache_stale", "lookup_ops",
                 "lookup_rtts", "verbs", "doorbells", "hocl_cas",
                 "flat_cas"}
+FINITE = ("mops", "p50_us", "p90_us", "p99_us", "rtt_p50", "rtt_p99",
+          "write_bytes_median")
 
-for path in ("BENCH_ci_smoke.json", "BENCH_ci_cache.json"):
+for path in ("BENCH_ci_smoke.json", "BENCH_ci_cache.json",
+             "BENCH_ci_cluster.json", "BENCH_scaling.json"):
     d = json.load(open(path))
     missing = SPEC_FIELDS - set(d["spec"])
     assert not missing, (path, "spec missing", missing)
@@ -84,6 +129,10 @@ for path in ("BENCH_ci_smoke.json", "BENCH_ci_cache.json"):
         assert COUNTER_KEYS <= set(r["counters"]), \
             (path, COUNTER_KEYS - set(r["counters"]))
         assert r["mops"] > 0 and r["p99_us"] > 0
+        # json floats must be finite: a zero-time run reports 0.0, never
+        # the non-standard Infinity token
+        for k in FINITE:
+            assert math.isfinite(r[k]), (path, k, r[k])
 
 d = json.load(open("BENCH_ci_smoke.json"))
 systems = {r["system"] for r in d["results"]}
@@ -92,7 +141,13 @@ assert systems == {"sherman", "fg+"}, systems
 c = json.load(open("BENCH_ci_cache.json"))["results"][0]
 assert c["cache_hit_rate"] >= 0.9, c["cache_hit_rate"]
 assert 0 < c["reads_per_lookup"] <= 1.5, c["reads_per_lookup"]
+
+cl = json.load(open("BENCH_ci_cluster.json"))["results"][0]
+assert cl["n_clients"] == 2 and len(cl["per_cs"]) == 2, \
+    (cl["n_clients"], len(cl["per_cs"]))
+assert cl["conservation_ok"] and cl["rounds"] > 0
 print("BENCH schema OK; cache smoke:",
       f"hit_rate={c['cache_hit_rate']:.3f}",
-      f"reads/lookup={c['reads_per_lookup']:.2f}")
+      f"reads/lookup={c['reads_per_lookup']:.2f};",
+      f"cluster smoke: {len(cl['per_cs'])} CS, {cl['rounds']} rounds")
 EOF

@@ -1,0 +1,228 @@
+"""ClusterNode — one compute server of the multi-CS cluster plane.
+
+A node owns everything the paper gives a compute server privately:
+
+* its **index cache** (:class:`repro.core.cache.IndexCache`) — a private
+  replica with its *own* staleness trajectory.  Unlike the single-frontend
+  ``ShermanIndex``, a node is never fed remote CSs' ``WriteStats``: it
+  learns of remote splits lazily, through version/fence mismatch on its
+  own reads or through its periodic sync sweeps
+  (``IndexCache.end_round``);
+* its **repair queue** (:class:`repro.core.write.RepairQueue`) — the
+  B-link half-splits *it* created and must complete;
+* its **LLT view** — HOCL conflict grouping runs over the node's own
+  batch only (every lane carries this node's CS id), so local wait queues
+  and handovers are genuinely private.  Cross-CS contention is *not*
+  visible here; it emerges in the scheduler's merged verb timeline
+  (DESIGN.md §11).
+
+A node executes op batches against the **shared** memory-side
+:class:`~repro.core.tree.TreeState` (state in, state out — the node holds
+no tree state) and returns per-phase stats dicts; the scheduler turns
+those into verb traces, merges them across the fleet, and prices the
+merged timeline.  Nothing here touches netsim.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.api import (_jit_lookup, _jit_range, _jit_range_cached,
+                            _jit_repair, _jit_write_phase, write_stats_dict)
+from repro.core.cache import IndexCache
+from repro.core.tree import TreeConfig, TreeState
+from repro.core.write import RepairQueue
+
+
+class ClusterNode:
+    """One compute server: private cache + repair queue + LLT grouping."""
+
+    def __init__(self, cs_id: int, cfg: TreeConfig, *,
+                 cache_bytes: int = 64 << 20,
+                 cache_levels: Optional[int] = None,
+                 cache_sync_every: int = 8,
+                 cache_chase_hops: int = 4,
+                 sync_rounds: int = 4,
+                 kernel_mode: Optional[str] = None):
+        self.cs_id = int(cs_id)
+        self.cfg = cfg
+        self.cache = IndexCache(cfg, cache_bytes, levels=cache_levels,
+                                chase_hops=cache_chase_hops,
+                                sync_every=cache_sync_every,
+                                sync_rounds=sync_rounds,
+                                kernel_mode=kernel_mode)
+        self.repair = RepairQueue.empty(1)
+        self.counters = {
+            "ops": 0, "write_ops": 0, "read_ops": 0, "retried_ops": 0,
+            "phases": 0, "lookup_ops": 0, "lookup_rtts": 0,
+            "leaf_splits": 0, "internal_splits": 0, "root_splits": 0,
+            "split_same_ms": 0, "handovers": 0, "hocl_cas": 0,
+            "flat_cas": 0, "cache_hits": 0, "cache_misses": 0,
+            "cache_stale": 0,
+            # per-trace functional totals (pre-merge) — the conservation
+            # oracle the merged simulation is checked against
+            "verbs": 0, "doorbells": 0, "bytes": 0.0,
+        }
+
+    # -- trace attribution (called by the scheduler) -----------------------
+    def note_trace(self, trace) -> None:
+        """Accumulate one of this CS's traces' functional totals."""
+        c = self.counters
+        c["verbs"] += trace.n_verbs
+        c["doorbells"] += trace.n_doorbells
+        c["bytes"] += trace.total_bytes
+
+    # -- write path --------------------------------------------------------
+    def _carry_repair(self, n: int) -> None:
+        old = self.repair
+        fresh = RepairQueue.empty(n)
+        k = min(n, old.sep.shape[0])
+        self.repair = RepairQueue(
+            sep=fresh.sep.at[:k].set(old.sep[:k]),
+            child=fresh.child.at[:k].set(old.child[:k]),
+            level=fresh.level.at[:k].set(old.level[:k]),
+            valid=fresh.valid.at[:k].set(old.valid[:k]))
+
+    def write_batch(self, st: TreeState, keys, vals, is_delete,
+                    max_phases: int = 8):
+        """Apply one write batch of this CS's threads to the shared state.
+
+        Returns ``(state, phase_stats)``: the new tree state and one
+        numpy stats dict per executed phase (``api.write_stats_dict``
+        layout — the verb plane's input).  The node's own splits feed its
+        cache's invalidation hook; *remote* CSs stay oblivious.
+        """
+        keys = jnp.asarray(keys, jnp.int32)
+        n = keys.shape[0]
+        if n == 0:
+            return st, []
+        vals = jnp.asarray(vals, jnp.int32) if vals is not None else \
+            jnp.zeros((n,), jnp.int32)
+        is_del = jnp.broadcast_to(jnp.asarray(is_delete, bool), (n,))
+        cs = jnp.full((n,), self.cs_id, jnp.int32)
+        active = jnp.ones((n,), bool)
+        if self.repair.valid.shape[0] != n:
+            self._carry_repair(n)
+        if self.cache.enabled:
+            route_hits = self.cache.route_hits(st, keys)
+        else:
+            route_hits = np.zeros(n, bool)
+        c = self.counters
+        c["write_ops"] += n
+        c["ops"] += n
+        phase_stats = []
+        for phase_no in range(max_phases):
+            st, done, stats, self.repair = _jit_write_phase(
+                self.cfg, st, keys, vals, is_del, active, cs, self.repair)
+            phase_stats.append(write_stats_dict(
+                stats, np.asarray(active), route_hits, int(st.height)))
+            c["phases"] += 1
+            if phase_no:
+                c["retried_ops"] += int(np.asarray(active).sum())
+            self.cache.note_splits(int(stats.n_leaf_splits),
+                                   int(stats.n_internal_splits),
+                                   int(stats.n_root_splits), st)
+            c["leaf_splits"] += int(stats.n_leaf_splits)
+            c["internal_splits"] += int(stats.n_internal_splits)
+            c["root_splits"] += int(stats.n_root_splits)
+            c["split_same_ms"] += int(stats.n_split_same_ms)
+            c["handovers"] += int(stats.handovers)
+            c["hocl_cas"] += int(stats.hocl_remote_cas)
+            c["flat_cas"] += int(stats.flat_remote_cas)
+            active = active & ~done
+            if not bool(jnp.any(active)):
+                break
+        if bool(jnp.any(active)):
+            raise RuntimeError(f"CS {self.cs_id}: write batch did not "
+                               "converge; pool exhausted or max_phases "
+                               "too low")
+        st = self.drain_repairs(st)
+        return st, phase_stats
+
+    def drain_repairs(self, st: TreeState, max_iters: int = 16) -> TreeState:
+        """Complete this CS's outstanding B-link half-splits."""
+        for _ in range(max_iters):
+            if not bool(jnp.any(self.repair.valid)):
+                return st
+            st, self.repair, ni, nr = _jit_repair(self.cfg, st, self.repair)
+            self.counters["internal_splits"] += int(ni)
+            self.counters["root_splits"] += int(nr)
+            self.cache.note_splits(0, int(ni), int(nr), st)
+        if bool(jnp.any(self.repair.valid)):
+            raise RuntimeError(f"CS {self.cs_id}: repair queue did not "
+                               "drain")
+        return st
+
+    # -- read path ---------------------------------------------------------
+    def lookup_batch(self, st: TreeState, keys):
+        """Point lookups through this CS's private cache.
+
+        Returns ``(values, found, stats)`` where ``stats`` is the read
+        trace's input dict (per-lane remote reads + target leaves)."""
+        keys = jnp.asarray(keys, jnp.int32)
+        n = keys.shape[0]
+        c = self.counters
+        if self.cache.enabled:
+            res, cst = self.cache.lookup(st, keys)
+            c["cache_hits"] += int((cst["hit"] & ~cst["stale"]).sum())
+            c["cache_misses"] += int((~cst["hit"]).sum())
+            c["cache_stale"] += int(cst["stale"].sum())
+            reads = np.asarray(cst["remote_reads"])
+            sd = dict(active=np.ones(n, bool),
+                      cache_hit=cst["hit"] & ~cst["stale"],
+                      remote_reads=reads,
+                      leaf=np.asarray(res.leaf),
+                      height=int(st.height))
+        else:
+            res = _jit_lookup(self.cfg, st, keys)
+            c["cache_misses"] += n
+            reads = np.full(n, max(int(st.height), 1), np.int64)
+            sd = dict(active=np.ones(n, bool),
+                      cache_hit=np.zeros(n, bool),
+                      leaf=np.asarray(res.leaf),
+                      height=int(st.height))
+        c["read_ops"] += n
+        c["ops"] += n
+        c["lookup_ops"] += n
+        c["lookup_rtts"] += int(reads.sum())
+        return np.asarray(res.value), np.asarray(res.found), sd
+
+    def scan_batch(self, st: TreeState, lo, count: int,
+                   max_leaves: Optional[int] = None):
+        """Range scans; the initial descent consults the private cache."""
+        lo = jnp.asarray(lo, jnp.int32)
+        n = lo.shape[0]
+        if max_leaves is None:
+            max_leaves = max(4, count)
+        if self.cache.enabled:
+            res = _jit_range_cached(self.cfg, st, lo, count, max_leaves,
+                                    self.cache.image(st))
+            hits = np.asarray(res.start_hit)
+            self.cache.note_hits(hits)
+        else:
+            res = _jit_range(self.cfg, st, lo, count, max_leaves)
+            hits = np.zeros(n, bool)
+        n_leaves = np.asarray(res.leaves_read)
+        sd = dict(active=np.ones(n, bool), cache_hit=hits,
+                  retries=np.maximum(n_leaves - 1, 0),
+                  leaf=np.asarray(res.start_leaf), scan=True,
+                  height=int(st.height))
+        c = self.counters
+        c["read_ops"] += n
+        c["ops"] += n
+        return (np.asarray(res.keys), np.asarray(res.vals),
+                np.asarray(res.n)), sd
+
+    # -- coherence tick ----------------------------------------------------
+    def end_round(self, st: TreeState) -> None:
+        """One scheduler round elapsed: run the private cache's periodic
+        version sweep if due (the node's only non-lazy coherence)."""
+        self.cache.end_round(st)
+
+    def take_maintenance(self):
+        """Drain the cache's un-priced fill/sweep reads (node, small)."""
+        if not self.cache.enabled:
+            return 0, 0
+        return self.cache.take_maintenance()

@@ -1,0 +1,308 @@
+"""The cluster scheduler: a fleet of ClusterNodes over one memory pool.
+
+One **round** (scheduler tick) interleaves one op batch per compute
+server (DESIGN.md §11):
+
+1. *Functional plane* — per-CS batches apply to the shared
+   :class:`~repro.core.tree.TreeState` in CS order (CS order is arrival
+   order, the cluster analogue of §8's lane-order rule).  Each node uses
+   only its private cache / repair queue / LLT grouping; remote splits
+   reach it lazily (stale reads, periodic sweeps), never as shared
+   ``WriteStats``.
+2. *Performance plane* — each node's per-phase verb traces are **merged**
+   (:func:`repro.core.verbs.merge_traces`) and replayed in one
+   discrete-event timeline against the shared per-MS NIC and atomic-unit
+   FIFOs.  Cross-CS GLT serialization, FG+ retry storms clogging the
+   atomic unit, and HOCL's handover savings are emergent queueing, not
+   formulas.
+
+The scheduler keeps two tallies per run: the **merged** totals the event
+loop reports and the **functional** per-CS trace totals accumulated
+before merging.  Their equality (verbs, doorbells, bytes) is the
+cluster's conservation invariant, exported as ``conservation_ok``.
+"""
+from __future__ import annotations
+
+import math
+import warnings
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.cluster.node import ClusterNode
+from repro.cluster.streams import ClusterStreams
+from repro.core import hocl, netsim, verbs as V
+from repro.core.netsim import Features, NetConfig, SHERMAN
+from repro.core.tree import TreeConfig, TreeState, bulkload
+from repro.workloads.keygen import scramble
+from repro.workloads.spec import OP_KINDS, WorkloadSpec
+
+VAL_MASK = (1 << 30) - 1
+
+
+class Cluster:
+    """A multi-CS simulation plane over one shared memory-side state."""
+
+    def __init__(self, cfg: TreeConfig, state: TreeState,
+                 features: Features = SHERMAN,
+                 net: Optional[NetConfig] = None, *,
+                 n_clients: int = 64,
+                 cache_bytes: int = 64 << 20,
+                 cache_levels: Optional[int] = None,
+                 sync_rounds: int = 4,
+                 kernel_mode: Optional[str] = None):
+        self.cfg = cfg
+        self.state = state
+        self.features = features
+        self.net = net or NetConfig()
+        n_cs = max(1, min(cfg.n_cs, int(n_clients)))
+        self.per_cs = max(1, -(-int(n_clients) // n_cs))
+        self.n_clients = self.per_cs * n_cs     # realized lanes per round
+        if self.n_clients != int(n_clients):
+            warnings.warn(
+                f"n_clients={n_clients} is not a multiple of the "
+                f"{n_cs}-CS fleet; running {self.n_clients} client "
+                f"threads ({n_cs} CS x {self.per_cs})", stacklevel=2)
+        self.nodes = [
+            ClusterNode(i, cfg, cache_bytes=cache_bytes,
+                        cache_levels=cache_levels, sync_rounds=sync_rounds,
+                        kernel_mode=kernel_mode)
+            for i in range(n_cs)]
+        # merged-timeline totals (the priced side)
+        self.counters = {
+            "msgs": 0, "verbs": 0, "doorbells": 0, "bytes": 0.0,
+            "cas_msgs": 0, "sim_time_s": 0.0, "merged_waves": 0,
+            "rounds": 0, "cross_cs_conflicts": 0,
+        }
+        self.latencies_write: list[np.ndarray] = []
+        self.latencies_read: list[np.ndarray] = []
+        self.rtts_write: list[np.ndarray] = []
+        self.write_bytes: list[np.ndarray] = []
+
+    @property
+    def n_cs(self) -> int:
+        return len(self.nodes)
+
+    # -- constructors ------------------------------------------------------
+    @classmethod
+    def build(cls, cfg: TreeConfig, keys, vals, fill: float = 0.8,
+              **kw) -> "Cluster":
+        return cls(cfg, bulkload(cfg, keys, vals, fill=fill), **kw)
+
+    # -- merged pricing ----------------------------------------------------
+    def _simulate_merged(self, tagged, kind: str) -> None:
+        """Merge per-CS traces (``tagged`` = [(cs, trace), ...]) and price
+        the shared timeline; attribute functional totals per CS."""
+        tagged = [(cs, t) for cs, t in tagged if t.n_verbs]
+        if not tagged:
+            return
+        for cs, t in tagged:
+            self.nodes[cs].note_trace(t)
+        sim, merged = netsim.price_merged_phase(
+            [t for _, t in tagged], self.features, self.net, self.cfg)
+        c = self.counters
+        c["msgs"] += sim["msgs"]
+        c["verbs"] += sim["verbs"]
+        c["doorbells"] += sim["doorbells"]
+        c["bytes"] += sim["bytes"]
+        c["cas_msgs"] += sim["cas_msgs"]
+        c["sim_time_s"] += sim["makespan_s"]
+        c["merged_waves"] += 1
+        if kind == "write":
+            self.latencies_write.append(sim["latency_s"])
+            self.rtts_write.append(sim["rtts"])
+            self.write_bytes.append(sim["write_bytes"])
+        elif kind == "read":
+            self.latencies_read.append(sim["latency_s"])
+
+    def _maintenance(self) -> None:
+        """Price the fleet's cache maintenance (fills + sweeps), merged."""
+        tagged = []
+        for i, node in enumerate(self.nodes):
+            nr, sr = node.take_maintenance()
+            if nr or sr:
+                tagged.append((i, V.maintenance_trace(
+                    nr, sr, self.cfg.n_ms, self.cfg.node_bytes,
+                    self.net.small_io_bytes,
+                    rows_ms=node.cache.rows_ms())))
+        self._simulate_merged(tagged, "maint")
+
+    # -- cluster waves -----------------------------------------------------
+    def write_wave(self, keys_by_cs: Sequence, vals_by_cs=None,
+                   is_delete: bool = False) -> None:
+        """One cluster write wave: every CS's batch, applied in CS order,
+        priced phase-by-phase in one merged timeline."""
+        per_cs_phases: list[list] = []
+        for i, node in enumerate(self.nodes):
+            keys = keys_by_cs[i] if i < len(keys_by_cs) else None
+            if keys is None or len(keys) == 0:
+                per_cs_phases.append([])
+                continue
+            vals = vals_by_cs[i] if vals_by_cs is not None else None
+            self.state, phases = node.write_batch(self.state, keys, vals,
+                                                  is_delete)
+            per_cs_phases.append(phases)
+        leaves = [np.asarray(p[0]["leaf"]) for p in per_cs_phases if p]
+        if len(leaves) > 1:
+            self.counters["cross_cs_conflicts"] += \
+                hocl.cross_cs_contention(leaves)["contended_nodes"]
+        for k in range(max((len(p) for p in per_cs_phases), default=0)):
+            tagged = [(i, netsim.transformed_write_trace(
+                p[k], self.features, self.net, self.cfg))
+                for i, p in enumerate(per_cs_phases) if len(p) > k]
+            self._simulate_merged(tagged, "write")
+        self._maintenance()
+
+    def lookup_wave(self, keys_by_cs: Sequence) -> list:
+        """One cluster lookup wave; returns ``(values, found)`` per CS."""
+        tagged, out = [], []
+        for i, node in enumerate(self.nodes):
+            keys = keys_by_cs[i] if i < len(keys_by_cs) else None
+            if keys is None or len(keys) == 0:
+                out.append((np.zeros(0, np.int32), np.zeros(0, bool)))
+                continue
+            vals, found, sd = node.lookup_batch(self.state, keys)
+            tagged.append((i, netsim.read_trace_from_stats(sd, self.cfg)))
+            out.append((vals, found))
+        self._simulate_merged(tagged, "read")
+        self._maintenance()
+        return out
+
+    def scan_wave(self, lo_by_cs: Sequence, count: int,
+                  max_leaves: Optional[int] = None) -> list:
+        """One cluster scan wave; returns ``(keys, vals, n)`` per CS."""
+        tagged, out = [], []
+        for i, node in enumerate(self.nodes):
+            lo = lo_by_cs[i] if i < len(lo_by_cs) else None
+            if lo is None or len(lo) == 0:
+                out.append(None)
+                continue
+            res, sd = node.scan_batch(self.state, lo, count, max_leaves)
+            tagged.append((i, netsim.read_trace_from_stats(sd, self.cfg)))
+            out.append(res)
+        self._simulate_merged(tagged, "read")
+        self._maintenance()
+        return out
+
+    def end_round(self) -> None:
+        """Close one scheduler tick: per-CS coherence sweeps, then price
+        any maintenance they generated."""
+        for node in self.nodes:
+            node.end_round(self.state)
+        self._maintenance()
+        self.counters["rounds"] += 1
+
+    # -- reporting ---------------------------------------------------------
+    def node_totals(self) -> dict:
+        """Sum of the per-CS functional counters."""
+        keys = self.nodes[0].counters.keys()
+        return {k: sum(n.counters[k] for n in self.nodes) for k in keys}
+
+    def conservation_ok(self) -> bool:
+        """Merged-timeline totals == sum of per-CS functional trace
+        totals (verbs, doorbells, bytes) — the cluster invariant."""
+        nt = self.node_totals()
+        return (self.counters["verbs"] == nt["verbs"]
+                and self.counters["doorbells"] == nt["doorbells"]
+                and math.isclose(self.counters["bytes"], nt["bytes"],
+                                 rel_tol=1e-9, abs_tol=1e-6))
+
+    def combined_counters(self) -> dict:
+        """One flat counter dict: merged-timeline totals + per-CS sums —
+        a superset of ``ShermanIndex.counters`` so cluster runs share the
+        BENCH json schema."""
+        nt = self.node_totals()
+        out = dict(self.counters)
+        for k in ("phases", "write_ops", "read_ops", "retried_ops",
+                  "lookup_ops", "lookup_rtts", "leaf_splits",
+                  "internal_splits", "root_splits", "split_same_ms",
+                  "handovers", "hocl_cas", "flat_cas", "cache_hits",
+                  "cache_misses", "cache_stale"):
+            out[k] = nt[k]
+        return out
+
+    def throughput_mops(self) -> float:
+        t = self.counters["sim_time_s"]
+        n = self.node_totals()["ops"]
+        return n / t / 1e6 if t else 0.0
+
+
+def build_cluster(features: Features, cfg: TreeConfig, *,
+                  n_clients: int, records: int, keyspace: int = 1 << 20,
+                  cache_bytes: int = 64 << 20,
+                  cache_levels: Optional[int] = None,
+                  sync_rounds: int = 4, seed: int = 0,
+                  fill: float = 0.8,
+                  net: Optional[NetConfig] = None) -> Cluster:
+    """Load phase: bulk-load ``records`` scrambled records into the shared
+    pool and stand up the CS fleet (mirrors ``workloads.build_index``)."""
+    rng = np.random.default_rng(seed)
+    keys = scramble(np.arange(records, dtype=np.int64), keyspace)
+    vals = rng.integers(0, VAL_MASK, size=records)
+    return Cluster.build(cfg, keys, vals, fill=fill, features=features,
+                         net=net, n_clients=n_clients,
+                         cache_bytes=cache_bytes, cache_levels=cache_levels,
+                         sync_rounds=sync_rounds)
+
+
+def run_cluster(cluster: Cluster, spec: WorkloadSpec, *,
+                partitioned: bool = False, seed: int = 1,
+                keyspace: int = 1 << 20) -> int:
+    """Drive ``spec``'s op mix through the cluster in scheduler rounds.
+
+    Each round hands every CS a ``per_cs``-lane batch from its private
+    stream (op mix realized per CS via the salted remainder rotation, so
+    even one-lane batches mix over rounds) and executes the waves in a
+    fixed kind order (scan, read, rmw, update, delete, insert — the
+    engine's order).  Returns ``(done, op_counts)``: the number of client
+    ops issued and the realized per-kind mix.
+    """
+    streams = ClusterStreams(spec, cluster.n_cs, keyspace=keyspace,
+                             partitioned=partitioned, seed=seed)
+    n_cs, per_cs = cluster.n_cs, cluster.per_cs
+    ops_per_round = per_cs * n_cs
+    rounds = max(1, -(-spec.ops // ops_per_round))
+    done = 0
+    op_counts = {k: 0 for k in OP_KINDS}
+    for r in range(rounds):
+        counts = [spec.batch_counts(per_cs, salt=r * n_cs + cs)
+                  for cs in range(n_cs)]
+
+        def gather(kind, draw):
+            return [draw(cs, counts[cs][kind]) if counts[cs][kind] else None
+                    for cs in range(n_cs)]
+
+        if any(c["scan"] for c in counts):
+            cluster.scan_wave(gather("scan", streams.draw),
+                              count=spec.scan_len,
+                              max_leaves=max(4, spec.scan_len))
+        if any(c["read"] for c in counts):
+            cluster.lookup_wave(gather("read", streams.draw))
+        if any(c["rmw"] for c in counts):
+            keys = gather("rmw", streams.draw)
+            got = cluster.lookup_wave(keys)
+            vals = [((g.astype(np.int64) + 1) & VAL_MASK)
+                    if k is not None else None
+                    for k, (g, _) in zip(keys, got)]
+            cluster.write_wave(keys, vals)
+        if any(c["update"] for c in counts):
+            keys = gather("update", streams.draw)
+            vals = [streams.rngs[cs].integers(0, VAL_MASK, k.size)
+                    if k is not None else None
+                    for cs, k in enumerate(keys)]
+            cluster.write_wave(keys, vals)
+        if any(c["delete"] for c in counts):
+            cluster.write_wave(gather("delete", streams.draw), None,
+                               is_delete=True)
+        if any(c["insert"] for c in counts):
+            keys = gather("insert", streams.draw_insert)
+            vals = [streams.rngs[cs].integers(0, VAL_MASK, k.size)
+                    if k is not None else None
+                    for cs, k in enumerate(keys)]
+            cluster.write_wave(keys, vals)
+        cluster.end_round()
+        for c in counts:
+            for k in OP_KINDS:
+                op_counts[k] += c[k]
+        done += sum(sum(c.values()) for c in counts)
+    return done, {k: v for k, v in op_counts.items() if v}

@@ -1,0 +1,81 @@
+"""Per-CS key streams for the cluster plane.
+
+Each compute server draws its own operation stream from an independent
+RNG, so the fleet's accesses are genuinely uncorrelated — the property
+the single-frontend lane-block model could not give.  Two partitioning
+policies over the shared record-rank space:
+
+* ``shared`` (default) — every CS draws from the *whole* live-record
+  space under the spec's distribution.  Skewed workloads then send every
+  CS to the same global hot records: maximal cross-CS contention, the
+  paper's §5 evaluation topology.
+* ``partitioned`` — DEX-style (arXiv:2405.14502) static sharding: CS *i*
+  draws only from its contiguous rank shard, so each CS has a private
+  hot set and cross-CS conflicts (and cache-invalidation crosstalk)
+  collapse.  The contrast between the two policies is exactly DEX's
+  argument that compute-side partitioning, not raw client count,
+  dominates scalability.
+
+Inserts use a CS-strided rank cursor (rank ``base + i + k·n_cs`` for
+CS *i*) so concurrently inserting CSs never collide on a key; newly
+inserted ranks become drawable by every CS in shared mode (YCSB
+semantics) and stay out of the static shards in partitioned mode.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.workloads.keygen import draw_keys, latest_ranks, scramble, \
+    zipf_ranks
+from repro.workloads.spec import WorkloadSpec
+
+
+class ClusterStreams:
+    """Per-CS operation/key streams over one shared record space."""
+
+    def __init__(self, spec: WorkloadSpec, n_cs: int, *,
+                 keyspace: int, partitioned: bool = False, seed: int = 1):
+        self.spec = spec
+        self.n_cs = int(n_cs)
+        self.keyspace = int(keyspace)
+        self.partitioned = bool(partitioned)
+        self.rngs = [np.random.default_rng((seed, cs))
+                     for cs in range(self.n_cs)]
+        self.n_records = int(spec.load_records)   # live records (grows)
+        self._insert_base = int(spec.load_records)
+        self._inserted = [0] * self.n_cs          # per-CS insert counters
+        # static DEX shards over the *loaded* ranks
+        per = max(1, spec.load_records // self.n_cs)
+        self._shard_lo = [min(cs * per, spec.load_records)
+                          for cs in range(self.n_cs)]
+        self._shard_len = [max(1, (min((cs + 1) * per, spec.load_records)
+                                   - self._shard_lo[cs]))
+                           for cs in range(self.n_cs)]
+
+    def draw(self, cs: int, n: int) -> np.ndarray:
+        """Draw ``n`` live-record keys for CS ``cs`` (int32)."""
+        rng, spec = self.rngs[cs], self.spec
+        if not self.partitioned:
+            return draw_keys(rng, n, distribution=spec.distribution,
+                             theta=spec.theta, nspace=self.n_records,
+                             keyspace=self.keyspace).astype(np.int32)
+        nspace = self._shard_len[cs]
+        if spec.distribution == "uniform":
+            ranks = rng.integers(0, nspace, size=n).astype(np.int64)
+        elif spec.distribution == "latest":
+            ranks = latest_ranks(rng, n, nspace, spec.theta)
+        else:
+            ranks = zipf_ranks(rng, n, nspace, spec.theta)
+        return scramble(self._shard_lo[cs] + ranks,
+                        self.keyspace).astype(np.int32)
+
+    def draw_insert(self, cs: int, n: int) -> np.ndarray:
+        """Draw ``n`` brand-new record keys for CS ``cs`` (CS-strided
+        insertion ranks — concurrent inserters never collide)."""
+        k = self._inserted[cs]
+        ranks = (self._insert_base + cs
+                 + (k + np.arange(n, dtype=np.int64)) * self.n_cs)
+        self._inserted[cs] += n
+        if not self.partitioned:
+            self.n_records = max(self.n_records, int(ranks[-1]) + 1)
+        return scramble(ranks, self.keyspace).astype(np.int32)

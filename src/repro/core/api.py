@@ -316,6 +316,9 @@ class ShermanIndex:
                 for p in (50, 90, 99)}   # µs
 
     def throughput_mops(self) -> float:
+        """Ops per simulated second.  0.0 before any op has been priced —
+        never ``inf``, which would leak non-standard ``Infinity`` tokens
+        into the BENCH json exports."""
         t = self.counters["sim_time_s"]
         n = self.counters["write_ops"] + self.counters["read_ops"]
-        return n / t / 1e6 if t else float("inf")
+        return n / t / 1e6 if t else 0.0

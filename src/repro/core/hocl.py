@@ -142,6 +142,32 @@ def group_by_node(cfg: TreeConfig, node: jax.Array, cs: jax.Array,
     )
 
 
+def cross_cs_contention(leaves_by_cs) -> dict:
+    """Cross-CS conflict decomposition of one cluster wave (numpy, host).
+
+    ``leaves_by_cs`` is one array of target-leaf rows per compute server
+    (active write lanes only).  In the cluster plane each CS computes its
+    HOCL groups privately (:func:`group_by_node` over its own batch), so
+    cross-CS contention is *not* visible to any single CS — this helper
+    gives the scheduler the merged view: how many nodes are contended by
+    more than one CS, the worst per-node CS fan-in, and the number of
+    cross-CS (CS, node) conflict pairs whose GLT serialization the trace
+    merge chains (`verbs.merge_traces`).
+    """
+    import numpy as np
+    pairs = [(np.unique(np.asarray(lv)), c)
+             for c, lv in enumerate(leaves_by_cs)
+             if np.asarray(lv).size]
+    if not pairs:
+        return dict(contended_nodes=0, max_cs_fanin=0, cross_pairs=0)
+    nodes = np.concatenate([p[0] for p in pairs])
+    uniq, counts = np.unique(nodes, return_counts=True)
+    contended = counts > 1
+    return dict(contended_nodes=int(contended.sum()),
+                max_cs_fanin=int(counts.max()),
+                cross_pairs=int((counts[contended] - 1).sum()))
+
+
 def lock_phase_stats(cfg: TreeConfig, g: Groups, active: jax.Array):
     """Scalar lock-plane counters for one write phase (netsim inputs)."""
     act = active

@@ -198,21 +198,21 @@ def price_write_phase(stats: dict, feat: Features, net: NetConfig, cfg):
     return sim
 
 
-def price_read_phase(stats: dict, feat: Features, net: NetConfig, cfg):
-    """Price a lookup/scan phase: sequential READ chains per lane.
+def read_trace_from_stats(stats: dict, cfg) -> V.VerbTrace:
+    """Build a lookup/scan phase's READ-chain trace from its stats dict.
 
     When the caller measured the reads directly (the functional index
     cache reports per-lane ``remote_reads``), that count is replayed
     as-is; otherwise it derives from ``cache_hit``/``height``.  Version
     ``retries`` (e.g. extra leaves of a scan) extend the chain and are
     clamped at zero — an empty scan still pays its initial descent.
+    Shared by :func:`price_read_phase` and the cluster plane's per-CS
+    trace collection (:mod:`repro.cluster.sched`).
     """
     act = np.asarray(stats["active"], bool)
     n = int(act.sum())
     if n == 0:
-        return dict(latency_s=np.zeros(0), makespan_s=0.0, mops=0.0,
-                    rtts=np.zeros(0, np.int64), msgs=0, verbs=0, bytes=0.0,
-                    cas_msgs=0, doorbells=0)
+        return V._empty_trace()
     retries = np.maximum(np.asarray(stats["retries"])[act], 0) \
         if "retries" in stats else np.zeros(n, np.int64)
     if "remote_reads" in stats:
@@ -225,11 +225,39 @@ def price_read_phase(stats: dict, feat: Features, net: NetConfig, cfg):
         leaf_ms = cfg.ms_of(np.asarray(stats["leaf"])[act].astype(np.int64))
     else:
         leaf_ms = np.arange(n, dtype=np.int64) % cfg.n_ms
-    tr = V.read_phase_trace(reads, leaf_ms, cfg.n_ms, cfg.node_bytes,
-                            scan=bool(stats.get("scan", False)))
+    return V.read_phase_trace(reads, leaf_ms, cfg.n_ms, cfg.node_bytes,
+                              scan=bool(stats.get("scan", False)))
+
+
+def price_read_phase(stats: dict, feat: Features, net: NetConfig, cfg):
+    """Price a lookup/scan phase: sequential READ chains per lane
+    (see :func:`read_trace_from_stats` for the trace semantics)."""
+    n = int(np.asarray(stats["active"], bool).sum())
+    if n == 0:
+        return dict(latency_s=np.zeros(0), makespan_s=0.0, mops=0.0,
+                    rtts=np.zeros(0, np.int64), msgs=0, verbs=0, bytes=0.0,
+                    cas_msgs=0, doorbells=0)
+    tr = read_trace_from_stats(stats, cfg)
     sim = simulate(tr, net, cfg.n_ms, feat.onchip)
     sim["mops"] = n / sim["makespan_s"] / 1e6 if sim["makespan_s"] else 0.0
     return sim
+
+
+def price_merged_phase(traces: list[V.VerbTrace], feat: Features,
+                       net: NetConfig, cfg):
+    """Price one cluster wave: merge per-CS traces into one timeline and
+    replay it against the *shared* per-MS resources.
+
+    Returns ``(sim, merged)``: the usual :func:`simulate` totals (per
+    merged lane latency, makespan, verb/byte/doorbell counts) plus the
+    merged trace itself so the caller can attribute lanes back to their
+    source CS via ``merged.meta['lane_cs']``.  Cross-CS GLT serialization
+    and NIC/atomic-unit queueing are emergent — see
+    :func:`repro.core.verbs.merge_traces`.
+    """
+    merged = V.merge_traces(traces)
+    sim = simulate(merged, net, cfg.n_ms, feat.onchip)
+    return sim, merged
 
 
 def price_maintenance(node_reads: int, small_reads: int, feat: Features,

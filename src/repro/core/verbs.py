@@ -12,7 +12,9 @@ split outputs, remote-read counts.  This module turns them into a
 * ``lane``     — issuing client lane (-1 for background traffic),
 * ``doorbell`` — posting group: verbs sharing an id ride one doorbell ring,
 * ``dep``/``dep2`` — verbs whose *completion* gates this verb's posting,
-* ``at``       — earliest client-side post time (used to stagger spin CAS).
+* ``at``       — earliest client-side post time (used to stagger spin CAS),
+* ``obj``      — target object of lock-plane verbs (the GLT entry's node
+  row), so :func:`merge_traces` can serialize cross-CS lock conflicts.
 
 ``netsim.simulate`` replays a trace against per-MS resources; nothing in
 the trace is priced here.
@@ -81,6 +83,9 @@ class VerbTrace:
     dep: np.ndarray        # [V] int64  gating verb index (-1 = none)
     dep2: np.ndarray       # [V] int64  second gate (cross-lane lock chain)
     at: np.ndarray         # [V] float  earliest client post time
+    obj: np.ndarray | None = None  # [V] int64 target object (GLT lock row for
+    #    lock-plane verbs, -1/None elsewhere) — lets merge_traces serialize
+    #    cross-CS lock conflicts on the shared GLT entry
     n_lanes: int = 0
     meta: dict = dataclasses.field(default_factory=dict, repr=False)
 
@@ -128,7 +133,8 @@ def _empty_trace(n_lanes: int = 0, meta: dict | None = None) -> VerbTrace:
     return VerbTrace(kind=z(np.int8), role=z(np.int8), ms=z(np.int32),
                      nbytes=z(np.int64), lane=z(np.int32),
                      doorbell=z(np.int64), dep=z(np.int64), dep2=z(np.int64),
-                     at=z(np.float64), n_lanes=n_lanes, meta=meta or {})
+                     at=z(np.float64), obj=z(np.int64), n_lanes=n_lanes,
+                     meta=meta or {})
 
 
 def _chain_layout(R: np.ndarray, leaf_ms: np.ndarray, n_ms: int,
@@ -194,6 +200,7 @@ def write_phase_trace(sd: dict, cfg, rtt_s: float) -> VerbTrace:
         n=n,
         read_cnt=np.where(cache_hit, 1, height).astype(np.int64),
         leaf_ms=leaf_ms.astype(np.int64), sib_ms=sib_ms.astype(np.int64),
+        leaf_row=leaf,
         split=split, same_ms=same_ms, pred=pred,
         node_rank=node_rank,
         cycle_head=f("cycle_head").astype(bool),
@@ -236,6 +243,8 @@ def _assemble(meta: dict, cas_mask: np.ndarray, unlock_mask: np.ndarray,
     dep = np.full(total, -1, np.int64)
     dep2 = np.full(total, -1, np.int64)
     at = np.zeros(total, np.float64)
+    obj = np.full(total, -1, np.int64)
+    leaf_row = meta["leaf_row"].astype(np.int64)
 
     lanes = np.arange(n, dtype=np.int64)
 
@@ -269,6 +278,7 @@ def _assemble(meta: dict, cas_mask: np.ndarray, unlock_mask: np.ndarray,
         lanes[cas_mask]
     dep[c] = last_read[cas_mask]
     dep2[c] = pred_end[cas_mask]
+    obj[c] = leaf_row[cas_mask]
 
     # -- WRITEBACK ----------------------------------------------------------
     w = wb_idx
@@ -293,6 +303,7 @@ def _assemble(meta: dict, cas_mask: np.ndarray, unlock_mask: np.ndarray,
     ms[u], nbytes[u], lane[u] = leaf_ms[unlock_mask], LOCK_BYTES, \
         lanes[unlock_mask]
     dep[u] = wb_idx[unlock_mask]
+    obj[u] = leaf_row[unlock_mask]
 
     # -- SPIN: failed attempts of waiting lanes, one per RTT-spaced poll ----
     if nSp:
@@ -303,6 +314,7 @@ def _assemble(meta: dict, cas_mask: np.ndarray, unlock_mask: np.ndarray,
         sj = np.arange(nSp, dtype=np.int64) - soff[splane]
         kind[sp], role[sp] = CAS, SPIN
         ms[sp], nbytes[sp], lane[sp] = leaf_ms[splane], LOCK_BYTES, splane
+        obj[sp] = leaf_row[splane]
         at[sp] = (sj + 1) * meta["rtt_s"]
 
     meta = dict(meta, cas_mask=cas_mask, unlock_mask=unlock_mask,
@@ -310,7 +322,7 @@ def _assemble(meta: dict, cas_mask: np.ndarray, unlock_mask: np.ndarray,
                 ul_idx=ul_idx, cas_idx=cas_idx)
     return VerbTrace(kind=kind, role=role, ms=ms, nbytes=nbytes, lane=lane,
                      doorbell=np.arange(total, dtype=np.int64), dep=dep,
-                     dep2=dep2, at=at, n_lanes=n, meta=meta)
+                     dep2=dep2, at=at, obj=obj, n_lanes=n, meta=meta)
 
 
 # --------------------------------------------------------------------------
@@ -413,3 +425,84 @@ def maintenance_trace(node_reads: int, small_reads: int, n_ms: int,
         doorbell=np.arange(total, dtype=np.int64),
         dep=np.full(total, -1, np.int64), dep2=np.full(total, -1, np.int64),
         at=np.zeros(total), n_lanes=0, meta={})
+
+
+# --------------------------------------------------------------------------
+# multi-trace merge (the cluster plane's contention interface)
+# --------------------------------------------------------------------------
+
+def merge_traces(traces: list[VerbTrace],
+                 glt_chain: bool = True) -> VerbTrace:
+    """Merge per-CS verb traces into one concurrent timeline.
+
+    Each input trace is one compute server's verb stream for the same
+    scheduler round; the merged trace replays them against *shared* per-MS
+    NIC and atomic-unit FIFOs (``netsim.simulate``), so cross-CS queueing
+    delay falls out of the event loop instead of a closed-form formula.
+
+    The merge is conservative by construction: verbs, bytes, CAS and
+    doorbell rings are concatenated (indices/lanes offset per trace, -1
+    sentinels preserved), never created or dropped — the conservation
+    property the cluster tests pin.
+
+    With ``glt_chain`` (default) the merge additionally serializes
+    cross-CS lock conflicts on the shared GLT entry: the *entry* LOCK of
+    trace *t* on object ``o`` (the one CAS per trace whose intra-CS
+    ``dep2`` gate is free — its rank-0 lane) gains a gate on trace
+    *t-1*'s last UNLOCK of ``o``.  Trace order is arrival order (the
+    scheduler passes CSs in functional apply order), matching the
+    functional plane's serialization.  Intra-CS chains (HOCL wait queues
+    / spin storms) are already inside each trace.
+
+    ``meta`` of the result carries ``lane_cs`` (source *position* of
+    every merged lane in the caller's ``traces`` list — empty traces
+    keep their position, so attribution survives CSs that sat a wave
+    out) and ``src_verbs``/``src_lanes`` for attribution.
+    """
+    keep = [(i, t) for i, t in enumerate(traces) if t.n_verbs]
+    if not keep:
+        return _empty_trace()
+    src, traces = [i for i, _ in keep], [t for _, t in keep]
+    nv = np.array([t.n_verbs for t in traces], np.int64)
+    nl = np.array([t.n_lanes for t in traces], np.int64)
+    voff = np.concatenate([[0], np.cumsum(nv)[:-1]])
+    loff = np.concatenate([[0], np.cumsum(nl)[:-1]])
+
+    cat = np.concatenate
+    shift = lambda cols, offs: cat(
+        [np.where(c >= 0, c + o, -1) for c, o in zip(cols, offs)])
+    objs = [t.obj if t.obj is not None
+            else np.full(t.n_verbs, -1, np.int64) for t in traces]
+    merged = VerbTrace(
+        kind=cat([t.kind for t in traces]),
+        role=cat([t.role for t in traces]),
+        ms=cat([t.ms for t in traces]),
+        nbytes=cat([t.nbytes for t in traces]),
+        lane=shift([t.lane for t in traces], loff).astype(np.int32),
+        doorbell=cat([t.doorbell + o for t, o in zip(traces, voff)]),
+        dep=shift([t.dep for t in traces], voff),
+        dep2=shift([t.dep2 for t in traces], voff),
+        at=cat([t.at for t in traces]),
+        obj=cat(objs),
+        n_lanes=int(nl.sum()),
+        meta=dict(lane_cs=np.repeat(np.asarray(src, np.int64), nl),
+                  src_verbs=nv.tolist(), src_lanes=nl.tolist()))
+
+    if glt_chain:
+        dep2 = merged.dep2
+        role, obj = merged.role, merged.obj
+        last_unlock: dict[int, int] = {}
+        for t, o in zip(traces, voff):
+            sl = slice(int(o), int(o + t.n_verbs))
+            entry = np.nonzero((role[sl] == LOCK) & (obj[sl] >= 0)
+                               & (dep2[sl] < 0))[0] + int(o)
+            for i in entry.tolist():
+                prev = last_unlock.get(int(obj[i]), -1)
+                if prev >= 0:
+                    dep2[i] = prev
+            rel = np.nonzero((role[sl] == UNLOCK) & (obj[sl] >= 0))[0] \
+                + int(o)
+            for i in rel.tolist():
+                last_unlock[int(obj[i])] = i
+        merged = dataclasses.replace(merged, dep2=dep2)
+    return merged

@@ -11,7 +11,9 @@ package — see ``python -m repro.workloads --list``.
 """
 from repro.workloads.engine import (DEFAULT_CFG, KEYSPACE, SYSTEMS,
                                     RunResult, build_index, live_records,
-                                    run_systems, run_workload, write_json)
+                                    run_cluster_systems,
+                                    run_cluster_workload, run_systems,
+                                    run_workload, write_json)
 from repro.workloads.keygen import (draw_keys, latest_ranks, scramble,
                                     zipf_keys, zipf_ranks)
 from repro.workloads.spec import (OP_KINDS, PRESETS, TABLE3_PRESETS,
@@ -21,7 +23,7 @@ __all__ = [
     "WorkloadSpec", "RunResult", "PRESETS", "YCSB_PRESETS",
     "TABLE3_PRESETS", "OP_KINDS", "SYSTEMS", "DEFAULT_CFG", "KEYSPACE",
     "get_preset", "build_index", "live_records", "run_workload",
-    "run_systems",
+    "run_systems", "run_cluster_workload", "run_cluster_systems",
     "write_json", "draw_keys", "zipf_keys", "zipf_ranks", "latest_ranks",
     "scramble",
 ]

@@ -44,6 +44,16 @@ def main(argv: Optional[list] = None) -> str:
     ap.add_argument("--cache-levels", type=int, default=None,
                     help="cache only the top N internal levels "
                          "(default: every internal level that fits)")
+    ap.add_argument("--n-clients", type=int, default=None,
+                    help="run through the multi-CS cluster plane with N "
+                         "concurrent client threads spread over the "
+                         "config's compute servers (private caches + "
+                         "merged cross-CS contention; DESIGN.md §11)")
+    ap.add_argument("--partitioned", action="store_true",
+                    help="DEX-style static key partitioning across the "
+                         "CSs (cluster plane only): each CS draws from "
+                         "its own record shard instead of the shared "
+                         "hot set")
     ap.add_argument("--seed", type=int, default=1)
     ap.add_argument("--quick", action="store_true",
                     help=f"CI-sized run ({QUICK})")
@@ -88,10 +98,20 @@ def main(argv: Optional[list] = None) -> str:
         ap.error(f"--cache-bytes must be >= 0, got {args.cache_bytes}")
     if args.cache_levels is not None and args.cache_levels <= 0:
         ap.error(f"--cache-levels must be positive, got {args.cache_levels}")
+    if args.n_clients is not None and args.n_clients <= 0:
+        ap.error(f"--n-clients must be positive, got {args.n_clients}")
+    if args.partitioned and args.n_clients is None:
+        ap.error("--partitioned requires --n-clients (cluster plane)")
 
-    results = engine.run_systems(spec, systems, seed=args.seed,
-                                 cache_bytes=args.cache_bytes,
-                                 cache_levels=args.cache_levels)
+    if args.n_clients is not None:
+        results = engine.run_cluster_systems(
+            spec, systems, n_clients=args.n_clients, seed=args.seed,
+            cache_bytes=args.cache_bytes, cache_levels=args.cache_levels,
+            partitioned=args.partitioned)
+    else:
+        results = engine.run_systems(spec, systems, seed=args.seed,
+                                     cache_bytes=args.cache_bytes,
+                                     cache_levels=args.cache_levels)
     print(f"{'system':18s} {'Mops':>8s} {'p50us':>8s} {'p99us':>10s} "
           f"{'rtt50':>6s} {'wr.B':>7s} {'hit%':>6s} {'rd/l':>5s} "
           f"{'dbells':>8s} {'saved':>7s}")
@@ -101,6 +121,12 @@ def main(argv: Optional[list] = None) -> str:
               f"{r.write_bytes_median:7.0f} {100 * r.cache_hit_rate:6.1f} "
               f"{r.reads_per_lookup:5.2f} {r.doorbells:8d} "
               f"{r.doorbells_saved:7d}")
+        if r.per_cs:
+            stale = sum(p["cache_stale"] for p in r.per_cs)
+            print(f"  cluster: {len(r.per_cs)} CS x "
+                  f"{r.n_clients // len(r.per_cs)} threads, "
+                  f"{r.rounds} rounds, stale={stale}, "
+                  f"conservation={'OK' if r.conservation_ok else 'VIOLATED'}")
 
     path = args.json or f"BENCH_{spec.name.replace('-', '_')}.json"
     engine.write_json(path, spec, results)

@@ -73,6 +73,15 @@ class RunResult:
     doorbells: int = 0           # doorbell rings (combined verbs share one)
     doorbells_saved: int = 0     # rings saved by command combination
     retried_ops: int = 0         # lanes resubmitted by later write phases
+    # Multi-CS cluster plane (repro.cluster, DESIGN.md §11); single-frontend
+    # runs report n_clients=0, rounds=0, per_cs=[]:
+    n_clients: int = 0           # realized client threads per round
+    rounds: int = 0              # scheduler ticks executed
+    per_cs: list = dataclasses.field(default_factory=list)
+    #                            ^ per-CS breakdown (ops, verbs, cache, ...)
+    conservation_ok: bool = True  # merged-trace totals == sum of per-CS
+    #                            functional trace totals (always True for
+    #                            single-frontend runs — nothing is merged)
 
     def to_dict(self) -> dict:
         return _pyify(dataclasses.asdict(self))
@@ -116,18 +125,9 @@ def live_records(idx: ShermanIndex) -> int:
 
 
 def _batch_counts(spec: WorkloadSpec, b: int) -> dict:
-    """Deterministic per-batch op counts: floor each fraction, hand the
-    remainder to the largest fractions (stable shapes => stable jit cache)."""
-    fracs = [(k, getattr(spec, k)) for k in OP_KINDS]
-    counts = {k: int(f * b) for k, f in fracs}
-    rem = b - sum(counts.values())
-    for k, f in sorted(fracs, key=lambda kv: -kv[1]):
-        if rem <= 0:
-            break
-        if f > 0:
-            counts[k] += 1
-            rem -= 1
-    return counts
+    """Deterministic per-batch op counts (now a spec method; kept as a
+    module-level alias for existing callers)."""
+    return spec.batch_counts(b)
 
 
 def run_workload(idx: ShermanIndex, spec: WorkloadSpec, *, seed: int = 1,
@@ -180,33 +180,46 @@ def run_workload(idx: ShermanIndex, spec: WorkloadSpec, *, seed: int = 1,
         done += b
 
     sim_s = idx.counters["sim_time_s"] - c0.get("sim_time_s", 0.0)
-    lat_w = (np.concatenate(idx.latencies_write[lw0:])
-             if len(idx.latencies_write) > lw0 else np.zeros(0))
-    lat_r = (np.concatenate(idx.latencies_read[lr0:])
-             if len(idx.latencies_read) > lr0 else np.zeros(0))
-    lat = np.concatenate([lat_w, lat_r]) if lat_w.size + lat_r.size \
-        else np.zeros(1)
-    rtts = (np.concatenate(idx.rtts_write[rt0:])
-            if len(idx.rtts_write) > rt0 else np.zeros(1))
-    wb = (np.concatenate(idx.write_bytes[wb0:])
-          if len(idx.write_bytes) > wb0 else np.zeros(1))
-
-    def pct(a, p):
-        return float(np.percentile(a, p)) * 1e6 if a.size else 0.0
-
+    lat_w = _cat(idx.latencies_write[lw0:])
+    lat_r = _cat(idx.latencies_read[lr0:])
+    rtts = _cat(idx.rtts_write[rt0:])
+    wb = _cat(idx.write_bytes[wb0:])
     delta = {k: idx.counters[k] - c0.get(k, 0) for k in idx.counters}
+    return _summarize(spec, delta, done, sim_s, lat_w, lat_r, rtts, wb,
+                      system=system,
+                      op_counts={k: v for k, v in op_counts.items() if v})
+
+
+def _cat(arrs) -> np.ndarray:
+    """Concatenate a (possibly empty) list of per-phase sample arrays.
+    Empty runs yield a size-0 array — every percentile over it is guarded
+    (the ``rtt_p50``/``rtt_p99`` empty-run crash fix)."""
+    return np.concatenate(arrs) if arrs else np.zeros(0)
+
+
+def _summarize(spec: WorkloadSpec, delta: dict, done: int, sim_s: float,
+               lat_w, lat_r, rtts, wb, *, system: str = "",
+               op_counts: Optional[dict] = None, **extra) -> RunResult:
+    """Fold one run's counter deltas + latency samples into a RunResult.
+    Shared by the single-frontend and cluster drivers; all percentile
+    reductions are guarded against empty sample sets, and throughput is
+    0.0 (never ``inf``) when nothing was priced."""
+    lat = np.concatenate([lat_w, lat_r])
+
+    def pct(a, p, scale=1e6):
+        return float(np.percentile(a, p)) * scale if a.size else 0.0
+
     cache_total = (delta["cache_hits"] + delta["cache_misses"]
                    + delta["cache_stale"])
     return RunResult(
-        mops=done / sim_s / 1e6 if sim_s else float("inf"),
+        mops=done / sim_s / 1e6 if sim_s else 0.0,
         p50_us=pct(lat, 50), p90_us=pct(lat, 90), p99_us=pct(lat, 99),
         counters=delta, system=system, workload=spec.name, n_ops=done,
         read_p50_us=pct(lat_r, 50), read_p99_us=pct(lat_r, 99),
         write_p50_us=pct(lat_w, 50), write_p99_us=pct(lat_w, 99),
-        rtt_p50=float(np.percentile(rtts, 50)),
-        rtt_p99=float(np.percentile(rtts, 99)),
-        write_bytes_median=float(np.median(wb)),
-        op_counts={k: v for k, v in op_counts.items() if v},
+        rtt_p50=pct(rtts, 50, 1.0), rtt_p99=pct(rtts, 99, 1.0),
+        write_bytes_median=float(np.median(wb)) if wb.size else 0.0,
+        op_counts=op_counts or {},
         cache_hits=delta["cache_hits"], cache_misses=delta["cache_misses"],
         cache_stale=delta["cache_stale"],
         cache_hit_rate=(delta["cache_hits"] / cache_total
@@ -215,7 +228,7 @@ def run_workload(idx: ShermanIndex, spec: WorkloadSpec, *, seed: int = 1,
                           if delta["lookup_ops"] else 0.0),
         verbs=delta["verbs"], doorbells=delta["doorbells"],
         doorbells_saved=delta["verbs"] - delta["doorbells"],
-        retried_ops=delta["retried_ops"])
+        retried_ops=delta["retried_ops"], **extra)
 
 
 def run_systems(spec: WorkloadSpec, systems: Sequence[str] = ("sherman",
@@ -237,6 +250,76 @@ def run_systems(spec: WorkloadSpec, systems: Sequence[str] = ("sherman",
                           cache_levels=cache_levels)
         out.append(run_workload(idx, spec, seed=seed, keyspace=keyspace,
                                 system=name))
+    return out
+
+
+def run_cluster_workload(spec: WorkloadSpec, features: Features, *,
+                         n_clients: int, cfg: TreeConfig = DEFAULT_CFG,
+                         keyspace: int = KEYSPACE,
+                         cache_bytes: int = 64 << 20,
+                         cache_levels: Optional[int] = None,
+                         partitioned: bool = False, sync_rounds: int = 4,
+                         seed: int = 1, system: str = "") -> RunResult:
+    """Run one spec through the multi-CS cluster plane (DESIGN.md §11).
+
+    ``n_clients`` concurrent client threads are spread over
+    ``min(cfg.n_cs, n_clients)`` compute servers, each with a private
+    index cache / repair queue / LLT; every wave is priced by merging the
+    fleet's verb traces into one shared-resource timeline.  The result
+    carries the per-CS breakdown (``per_cs``) and the merged-vs-functional
+    ``conservation_ok`` invariant.
+    """
+    from repro.cluster import build_cluster, run_cluster
+    cluster = build_cluster(features, cfg, n_clients=n_clients,
+                            records=spec.load_records, keyspace=keyspace,
+                            cache_bytes=cache_bytes,
+                            cache_levels=cache_levels,
+                            sync_rounds=sync_rounds, seed=0)
+    done, op_counts = run_cluster(cluster, spec, partitioned=partitioned,
+                                  seed=seed, keyspace=keyspace)
+    delta = cluster.combined_counters()
+    per_cs = []
+    for node in cluster.nodes:
+        c = node.counters
+        t = c["cache_hits"] + c["cache_misses"] + c["cache_stale"]
+        per_cs.append(dict(
+            cs=node.cs_id, ops=c["ops"], write_ops=c["write_ops"],
+            read_ops=c["read_ops"], retried_ops=c["retried_ops"],
+            verbs=c["verbs"], doorbells=c["doorbells"],
+            leaf_splits=c["leaf_splits"], handovers=c["handovers"],
+            cache_hits=c["cache_hits"], cache_misses=c["cache_misses"],
+            cache_stale=c["cache_stale"],
+            cache_hit_rate=c["cache_hits"] / t if t else 0.0))
+    return _summarize(
+        spec, delta, done, delta["sim_time_s"],
+        _cat(cluster.latencies_write), _cat(cluster.latencies_read),
+        _cat(cluster.rtts_write), _cat(cluster.write_bytes),
+        system=system, op_counts=op_counts, n_clients=cluster.n_clients,
+        rounds=delta["rounds"], per_cs=per_cs,
+        conservation_ok=cluster.conservation_ok())
+
+
+def run_cluster_systems(spec: WorkloadSpec,
+                        systems: Sequence[str] = ("sherman", "fg+"),
+                        cfg: TreeConfig = DEFAULT_CFG, *,
+                        n_clients: int, keyspace: int = KEYSPACE,
+                        cache_bytes: int = 64 << 20,
+                        cache_levels: Optional[int] = None,
+                        partitioned: bool = False, sync_rounds: int = 4,
+                        seed: int = 1) -> list[RunResult]:
+    """Cluster-plane analogue of :func:`run_systems` (fresh fleet each)."""
+    out = []
+    for name in systems:
+        try:
+            feat = SYSTEMS[name.lower()]
+        except KeyError:
+            raise KeyError(f"unknown system {name!r}; "
+                           f"known: {', '.join(sorted(SYSTEMS))}") from None
+        out.append(run_cluster_workload(
+            spec, feat, n_clients=n_clients, cfg=cfg, keyspace=keyspace,
+            cache_bytes=cache_bytes, cache_levels=cache_levels,
+            partitioned=partitioned, sync_rounds=sync_rounds, seed=seed,
+            system=name))
     return out
 
 

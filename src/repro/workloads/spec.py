@@ -59,6 +59,38 @@ class WorkloadSpec:
     def fractions(self) -> dict:
         return {k: getattr(self, k) for k in OP_KINDS}
 
+    #: Golden-ratio conjugate: ``frac(s * GOLDEN)`` is a low-discrepancy
+    #: sequence, so remainder slots sample the op mix *in proportion to
+    #: the fractions* while staying deterministic and well-interleaved.
+    _GOLDEN = 0.6180339887498949
+
+    def batch_counts(self, b: int, salt: int = 0) -> dict:
+        """Deterministic per-batch op counts: floor each fraction, then
+        assign each remainder slot by a fraction-weighted low-discrepancy
+        draw (golden-ratio sequence over the cumulative mix).
+
+        ``salt`` advances the sequence — the cluster scheduler passes
+        ``round * n_cs + cs`` so that tiny per-CS batches (down to one
+        lane) still realize the *weighted* mix over rounds (a 95/5 mix
+        stays 95/5, not 50/50) instead of collapsing onto one kind,
+        while shapes stay drawn from a bounded set (stable jit cache).
+        """
+        fracs = [(k, getattr(self, k)) for k in OP_KINDS]
+        counts = {k: int(f * b) for k, f in fracs}
+        rem = b - sum(counts.values())
+        eligible = [(k, f) for k, f in sorted(fracs, key=lambda kv: -kv[1])
+                    if f > 0]
+        total = sum(f for _, f in eligible)
+        for i in range(rem):
+            u = ((salt + i + 1) * self._GOLDEN) % 1.0
+            acc = 0.0
+            for k, f in eligible:
+                acc += f / total
+                if u < acc or (k, f) == eligible[-1]:
+                    counts[k] += 1
+                    break
+        return counts
+
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
 

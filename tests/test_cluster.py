@@ -1,0 +1,357 @@
+"""Multi-CS cluster plane (DESIGN.md §11): functional correctness of the
+fleet against the oracle, *lazy* cross-CS cache coherence, merged-trace
+conservation (seeded + hypothesis), cross-CS GLT serialization in the
+event loop, and the client-scaling acceptance curve."""
+import json
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.cluster import ClusterStreams, build_cluster, run_cluster
+from repro.core import netsim, verbs as V, write
+from repro.core.api import write_stats_dict
+from repro.core.netsim import FG_PLUS, SHERMAN, NetConfig
+from repro.core.ref import OracleIndex
+from repro.core.tree import TreeConfig, bulkload
+from repro.workloads import get_preset, run_cluster_systems
+
+CFG = TreeConfig(n_ms=2, nodes_per_ms=1024, fanout=8, n_locks_per_ms=512,
+                 max_height=6, n_cs=4)
+NET = NetConfig()
+TINY = dict(load_records=2_000, ops=256, batch=128)
+
+
+# --------------------------------------------------------------------------
+# functional plane: the fleet is oracle-correct
+# --------------------------------------------------------------------------
+
+def _seed_writes(cl, keys, cs=0, chunk=64):
+    """Feed ``keys`` through one CS in bounded waves (a scheduler round is
+    a bounded batch; a fresh tree can't absorb hundreds of inserts in one
+    wave's phase budget)."""
+    for i in range(0, len(keys), chunk):
+        kb = [None] * cl.n_cs
+        kb[cs] = np.asarray(keys[i:i + chunk], np.int32)
+        cl.write_wave(kb, [kb[c] for c in range(cl.n_cs)])
+
+
+def test_cluster_waves_match_oracle():
+    """Interleaved per-CS write/read waves stay oracle-correct: within a
+    round, CS order is arrival order (§8's lane rule lifted to CSs)."""
+    rng = np.random.default_rng(0)
+    base = np.arange(0, 2_000, 4)
+    cl = build_cluster(SHERMAN, CFG, n_clients=8, records=0)
+    # records=0 => empty pool; seed it through the cluster itself
+    oracle = OracleIndex()
+    for c in range(cl.n_cs):
+        _seed_writes(cl, base[c::cl.n_cs], cs=c)
+        oracle.insert_batch(base[c::cl.n_cs], base[c::cl.n_cs])
+    for rnd in range(4):
+        keys = [rng.choice(base, size=16).astype(np.int32)
+                for _ in range(cl.n_cs)]
+        vals = [rng.integers(0, 1 << 20, size=16).astype(np.int32)
+                for _ in range(cl.n_cs)]
+        cl.write_wave(keys, vals)
+        for k, v in zip(keys, vals):       # oracle applies in CS order
+            oracle.insert_batch(k, v)
+        probe = [rng.choice(base, size=24).astype(np.int32)
+                 for _ in range(cl.n_cs)]
+        got = cl.lookup_wave(probe)
+        for p, (g, f) in zip(probe, got):
+            for k, gi, fi in zip(p, g, f):
+                want = oracle.lookup(int(k))
+                assert fi and gi == want, (k, gi, want)
+        cl.end_round()
+    assert cl.conservation_ok()
+
+
+def test_remote_splits_discovered_lazily():
+    """The coherence tentpole: CS B is *not* fed CS A's split outputs —
+    it discovers them on its own reads (stale path) or sweeps, and stays
+    correct throughout."""
+    cl = build_cluster(SHERMAN, CFG, n_clients=2, records=0,
+                       sync_rounds=0)          # no periodic sweeps
+    a, b = cl.nodes
+    seed_k = np.arange(0, 2_000, 7, dtype=np.int32)
+    _seed_writes(cl, seed_k)
+    # warm B's private image, then split leaves via A only
+    cl.lookup_wave([None, seed_k[:32]])
+    assert b.counters["cache_hits"] > 0
+    dense = np.arange(0, 600, 2, dtype=np.int32)   # dense => leaf splits
+    _seed_writes(cl, dense)
+    assert a.counters["leaf_splits"] > 0
+    # A's own-cache hook fired; B's cache never heard of the splits
+    assert a.cache.counters.invalidations + a.cache.counters.fills > 1
+    b_inv_before = b.cache.counters.invalidations
+    probe = dense[:64]
+    got = cl.lookup_wave([None, probe])
+    vals, found = got[1]
+    assert found.all() and (vals == probe).all()
+    # ... and only *now*, through its own stale reads, does B learn
+    assert b.counters["cache_stale"] > 0
+    assert b.cache.counters.invalidations > b_inv_before
+
+
+def test_round_sweep_is_the_other_discovery_path():
+    """With sync_rounds set, a CS that never reads still invalidates its
+    stale entries through its periodic version sweep."""
+    cl = build_cluster(SHERMAN, CFG, n_clients=2, records=0, sync_rounds=1)
+    a, b = cl.nodes
+    seed_k = np.arange(0, 2_000, 7, dtype=np.int32)
+    _seed_writes(cl, seed_k)
+    cl.lookup_wave([None, seed_k[:32]])            # warm B's image
+    sweeps0 = b.cache.counters.sync_sweeps
+    dense = np.arange(0, 600, 2, dtype=np.int32)
+    _seed_writes(cl, dense)
+    assert a.counters["leaf_splits"] > 0
+    cl.end_round()                                 # B sweeps, no reads
+    assert b.cache.counters.sync_sweeps > sweeps0
+    assert b.cache.counters.invalidations > 0
+    # swept-clean image: B's next lookups miss/refresh instead of chasing
+    got = cl.lookup_wave([None, dense[:64]])
+    vals, found = got[1]
+    assert found.all() and (vals == dense[:64]).all()
+
+
+# --------------------------------------------------------------------------
+# performance plane: merged-trace conservation + GLT serialization
+# --------------------------------------------------------------------------
+
+def _cs_phase_sd(st, keys, cs_id, n_cs=4):
+    n = keys.shape[0]
+    k = jnp.asarray(keys, jnp.int32)
+    _, _, stats, _ = write.write_phase(
+        CFG, st, k, jnp.ones_like(k), jnp.zeros((n,), bool),
+        jnp.ones((n,), bool), jnp.full((n,), cs_id, jnp.int32))
+    return write_stats_dict(stats, np.ones(n, bool), np.zeros(n, bool),
+                            int(st.height))
+
+
+def _merge_case(feat, seed=3, n_cs=3, n=24):
+    """Per-CS write-phase traces over one shared state (hot + fresh keys
+    => cross-CS conflicts and splits)."""
+    rng = np.random.default_rng(seed)
+    base = rng.choice(20_000, size=600, replace=False)
+    st = bulkload(CFG, base, base)
+    traces = []
+    for cs in range(n_cs):
+        hot = rng.integers(0, 40, size=n // 2)
+        new = rng.choice(np.setdiff1d(np.arange(20_000), base),
+                         size=n // 2, replace=False)
+        sd = _cs_phase_sd(st, np.concatenate([hot, new]), cs)
+        traces.append(netsim.transformed_write_trace(sd, feat, NET, CFG))
+    return traces
+
+
+@pytest.mark.parametrize("feat", [SHERMAN, FG_PLUS], ids=["sherman", "fg+"])
+def test_merge_conserves_per_cs_functional_counters(feat):
+    """Merged per-CS traces conserve verb/byte/doorbell/CAS counts vs the
+    sum of the per-CS functional counters, and the shared timeline can
+    only be slower than any single CS alone."""
+    traces = _merge_case(feat)
+    sim, merged = netsim.price_merged_phase(traces, feat, NET, CFG)
+    assert sim["verbs"] == sum(t.n_verbs for t in traces)
+    assert sim["doorbells"] == sum(t.n_doorbells for t in traces)
+    assert sim["cas_msgs"] == sum(t.n_cas for t in traces)
+    assert sim["bytes"] == pytest.approx(
+        sum(t.total_bytes for t in traces))
+    assert merged.n_lanes == sum(t.n_lanes for t in traces)
+    assert np.isfinite(sim["latency_s"]).all()
+    solo = [netsim.simulate(t, NET, CFG.n_ms, feat.onchip)["makespan_s"]
+            for t in traces]
+    assert sim["makespan_s"] >= max(solo) * (1 - 1e-9)
+
+
+def test_glt_chain_serializes_cross_cs_lock_conflicts():
+    """Two CSs writing the same leaf: with the GLT chain, the second CS's
+    entry LOCK gates on the first CS's release — the merged makespan
+    grows by a full lock hold; without it the CSs falsely overlap."""
+    def one_cs_trace():
+        sd = dict(active=np.ones(1, bool), leaf=np.array([7]),
+                  local_rank=np.zeros(1), node_rank=np.zeros(1, np.int64),
+                  node_size=np.ones(1), cycle_head=np.ones(1, bool),
+                  chain_end=np.ones(1, bool), split_lane=np.zeros(1, bool),
+                  split_same_ms=np.zeros(1, bool),
+                  split_new_row=np.zeros(1, np.int64),
+                  cache_hit=np.ones(1, bool), height=2,
+                  hocl_remote_cas=1, flat_remote_cas=1)
+        return netsim.transformed_write_trace(sd, SHERMAN, NET, CFG)
+
+    traces = [one_cs_trace(), one_cs_trace()]
+    chained = V.merge_traces(traces, glt_chain=True)
+    overlap = V.merge_traces(traces, glt_chain=False)
+    # the second trace's entry LOCK picked up a cross-trace gate
+    locks = np.nonzero(chained.role == V.LOCK)[0]
+    assert (chained.dep2[locks] >= 0).sum() == 1
+    assert (overlap.dep2[np.nonzero(overlap.role == V.LOCK)[0]] < 0).all()
+    t_chain = netsim.simulate(chained, NET, CFG.n_ms, True)["makespan_s"]
+    t_over = netsim.simulate(overlap, NET, CFG.n_ms, True)["makespan_s"]
+    assert t_chain > t_over + NET.rtt_s          # >= one extra hold chain
+    # conservation is untouched by the chaining rewrite
+    assert chained.n_verbs == overlap.n_verbs == sum(
+        t.n_verbs for t in traces)
+
+
+def test_property_merge_conservation():
+    """Hypothesis property: for arbitrary per-CS fleets (sizes, key
+    skew), merged traces conserve verb/byte/doorbell counts vs the sum
+    of per-CS functional counters — for both SHERMAN and FG+."""
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=12, deadline=None)
+    @given(st.integers(min_value=1, max_value=4),       # fleet size
+           st.integers(min_value=2, max_value=24),      # lanes per CS
+           st.integers(min_value=0, max_value=2 ** 31 - 1))
+    def inner(n_cs, n, seed):
+        rng = np.random.default_rng(seed)
+        base = rng.choice(20_000, size=400, replace=False)
+        state = bulkload(CFG, base, base)
+        for feat in (SHERMAN, FG_PLUS):
+            traces = []
+            for cs in range(n_cs):
+                keys = rng.choice(base, size=n)     # live keys, shared
+                sd = _cs_phase_sd(state, keys, cs)
+                traces.append(netsim.transformed_write_trace(
+                    sd, feat, NET, CFG))
+            sim, merged = netsim.price_merged_phase(traces, feat, NET,
+                                                    CFG)
+            assert sim["verbs"] == sum(t.n_verbs for t in traces)
+            assert sim["doorbells"] == sum(t.n_doorbells for t in traces)
+            assert sim["cas_msgs"] == sum(t.n_cas for t in traces)
+            assert sim["bytes"] == pytest.approx(
+                sum(t.total_bytes for t in traces))
+            assert np.isfinite(sim["makespan_s"])
+
+    inner()
+
+
+# --------------------------------------------------------------------------
+# streams: shared hot set vs DEX-style partitioning
+# --------------------------------------------------------------------------
+
+def test_partitioned_streams_stay_in_shard():
+    spec = get_preset("ycsb-a", **TINY)
+    from repro.workloads.keygen import scramble
+    strm = ClusterStreams(spec, 4, keyspace=1 << 20, partitioned=True,
+                          seed=2)
+    per = spec.load_records // 4
+    for cs in range(4):
+        keys = strm.draw(cs, 256)
+        shard = set(scramble(
+            np.arange(cs * per, (cs + 1) * per, dtype=np.int64),
+            1 << 20).tolist())
+        assert set(int(k) for k in keys) <= shard
+    # strided insert cursors never collide across CSs
+    ins = [strm.draw_insert(cs, 50) for cs in range(4)]
+    allk = np.concatenate(ins)
+    assert np.unique(allk).size == allk.size
+
+
+def test_partitioning_removes_cross_cs_conflicts():
+    """DEX's argument, observable in the merged plane: static partitions
+    give each CS a private hot set, so cross-CS node conflicts (and the
+    contention the merge chains) collapse vs the shared hot set."""
+    spec = get_preset("write-only", theta=0.99, load_records=2_000,
+                      ops=128, batch=64)
+    res = {}
+    for part in (False, True):
+        cl = build_cluster(SHERMAN, CFG, n_clients=16,
+                           records=spec.load_records)
+        run_cluster(cl, spec, partitioned=part, seed=3)
+        res[part] = cl.counters["cross_cs_conflicts"]
+    assert res[False] > 0
+    assert res[True] < res[False]
+
+
+# --------------------------------------------------------------------------
+# engine wiring + the scaling acceptance, miniature
+# --------------------------------------------------------------------------
+
+def test_cluster_run_result_breakdown_and_schema():
+    spec = get_preset("ycsb-a", **TINY)
+    (r,) = run_cluster_systems(spec, ("sherman",), CFG, n_clients=8,
+                               seed=1)
+    assert r.n_clients == 8 and r.rounds > 0
+    assert len(r.per_cs) == CFG.n_cs
+    assert sum(p["ops"] for p in r.per_cs) >= r.n_ops
+    assert r.conservation_ok
+    assert r.verbs == sum(p["verbs"] for p in r.per_cs)
+    assert r.doorbells == sum(p["doorbells"] for p in r.per_cs)
+    assert r.mops > 0 and np.isfinite(r.p99_us)
+    d = json.loads(json.dumps(r.to_dict()))     # json-safe, round-trips
+    assert d["per_cs"][0]["cs"] == 0
+
+
+def test_scaling_advantage_grows_with_clients():
+    """The acceptance curve in miniature: SHERMAN >= FG+ on write-heavy
+    skew at the larger fleet, and the advantage grows with client
+    count."""
+    spec = get_preset("write-intensive", theta=0.99, load_records=2_000,
+                      ops=192, batch=96)
+    ratio = {}
+    for nc in (4, 16):
+        rs = {r.system: r
+              for r in run_cluster_systems(spec, ("sherman", "fg+"), CFG,
+                                           n_clients=nc, seed=1)}
+        for r in rs.values():
+            assert r.conservation_ok, (r.system, nc)
+        ratio[nc] = rs["sherman"].mops / rs["fg+"].mops
+    assert ratio[16] >= 1.0
+    assert ratio[16] > ratio[4]
+
+
+# --------------------------------------------------------------------------
+# satellites: empty-run guards, spec mix rotation
+# --------------------------------------------------------------------------
+
+def test_empty_run_reports_zero_not_inf():
+    """Satellite fixes: a zero-op run must neither crash the rtt
+    percentiles nor leak Infinity into the json export."""
+    import math
+    from repro.core import ShermanIndex
+    from repro.workloads import run_workload
+    idx = ShermanIndex.empty(CFG)
+    assert idx.throughput_mops() == 0.0
+    spec = get_preset("ycsb-a", load_records=0, ops=0, batch=128)
+    r = run_workload(idx, spec, system="sherman")
+    for v in (r.mops, r.rtt_p50, r.rtt_p99, r.p50_us, r.p99_us,
+              r.write_bytes_median):
+        assert math.isfinite(v), r
+    assert r.mops == 0.0 and r.rtt_p99 == 0.0
+    json.dumps(r.to_dict())
+
+
+def test_batch_counts_salt_realizes_weighted_mix_over_rounds():
+    """One-lane per-CS batches still realize the *weighted* op mix
+    across rounds (the fraction-proportional remainder draw the cluster
+    scheduler relies on): a 95/5 mix stays ~95/5, never ~50/50."""
+    spec = get_preset("ycsb-a")                  # 50/50 read/update
+    kinds = {k for salt in range(4)
+             for k, v in spec.batch_counts(1, salt=salt).items() if v}
+    assert kinds == {"read", "update"}
+    skewed = get_preset("ycsb-d")                # 95% read / 5% insert
+    tally = {"read": 0, "insert": 0}
+    for salt in range(200):
+        for k, v in skewed.batch_counts(1, salt=salt).items():
+            if v:
+                tally[k] += v
+    assert sum(tally.values()) == 200
+    assert 180 <= tally["read"] <= 198, tally    # ~95%, not ~50%
+    assert tally["insert"] >= 2, tally
+    # full batches are exact: floors dominate, remainder < #kinds
+    c = skewed.batch_counts(100)
+    assert c["read"] == 95 and c["insert"] == 5
+
+
+def test_merge_lane_cs_survives_empty_traces():
+    """Per-CS lane attribution keeps the caller's positions even when a
+    CS sat the wave out with an empty trace."""
+    from repro.core.verbs import _empty_trace
+    tr = _merge_case(SHERMAN, n_cs=2)
+    merged = V.merge_traces([tr[0], _empty_trace(), tr[1]])
+    lane_cs = merged.meta["lane_cs"]
+    assert set(lane_cs.tolist()) == {0, 2}
+    assert (lane_cs == 0).sum() == tr[0].n_lanes
+    assert (lane_cs == 2).sum() == tr[1].n_lanes

@@ -1,32 +1,26 @@
-"""Shared benchmark harness — now a thin shim over :mod:`repro.workloads`.
+"""Legacy benchmark entry points — a thin shim over :mod:`repro.workloads`.
 
-The workload engine (specs, key generators, driver, ``RunResult``) lives in
-``src/repro/workloads``; this module keeps the historical benchmark entry
-points (``build_index``, ``run_mix``, ``zipf_keys``) as aliases so older
-scripts keep working.  New code should import ``repro.workloads`` directly.
-
-Scaled to the CPU container (smaller keyspace / op counts than the paper's
-1B-key, 8-server cluster) — the netsim plane (repro.core.netsim) prices the
-measured structural metrics with the paper's hardware constants, so the
-*ratios* (Sherman vs FG+, ablation ladder, skew collapse) are the
-reproduction targets.
+The workload engine (specs, key generators, driver, ``RunResult``) lives
+in ``src/repro/workloads``; this module keeps exactly the documented
+historical aliases (``build_index``, ``run_mix``, ``zipf_keys``) so older
+scripts keep working.  Everything else that used to live here (figure
+CSV helpers, private workload mixes, tree configs) has moved to
+``benchmarks/paper_figs.py`` and ``repro.workloads`` — import from
+there.
 """
 from __future__ import annotations
 
 from repro.core import TreeConfig
 from repro.core.netsim import Features
-from repro.workloads import (DEFAULT_CFG, KEYSPACE, RunResult, WorkloadSpec,
+from repro.workloads import (DEFAULT_CFG, RunResult, WorkloadSpec,
                              live_records, run_workload, zipf_keys)
 from repro.workloads import build_index as _build_index
 
-__all__ = ["DEFAULT_CFG", "KEYSPACE", "BULK", "RunResult", "zipf_keys",
-           "build_index", "run_mix", "csv_row"]
-
-BULK = 60_000
+__all__ = ["build_index", "run_mix", "zipf_keys"]
 
 
 def build_index(features: Features, cfg: TreeConfig = DEFAULT_CFG,
-                bulk: int = BULK, cache_bytes: int = 64 << 20,
+                bulk: int = 60_000, cache_bytes: int = 64 << 20,
                 seed: int = 0):
     return _build_index(features, cfg, records=bulk,
                         cache_bytes=cache_bytes, seed=seed)
@@ -45,7 +39,3 @@ def run_mix(idx, *, read_frac: float, skew: float, n_ops: int = 8_192,
         ops=n_ops, batch=batch, scan_len=range_size or 10,
         load_records=max(1, live_records(idx)))
     return run_workload(idx, spec, seed=seed)
-
-
-def csv_row(name: str, us_per_call: float, derived: str) -> str:
-    return f"{name},{us_per_call:.3f},{derived}"

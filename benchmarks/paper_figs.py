@@ -10,10 +10,13 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import csv_row
 from repro.core.netsim import ABLATION_LADDER, FG_PLUS, SHERMAN, NetConfig
 from repro.workloads import (DEFAULT_CFG, build_index, get_preset,
                              run_workload)
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.3f},{derived}"
 
 
 def _run(features, skew, wl="write-intensive", n_ops=6_144, *, cfg=None,
@@ -96,12 +99,14 @@ def fig14_internal(n_ops=6_144):
     print("\n== Fig 14: internal metrics (write-intensive, skew 0.99) ==")
     for feat, nm in ((FG_PLUS, "FG+"), (SHERMAN, "Sherman")):
         idx, r = _run(feat, 0.99, "write-intensive", n_ops)
-        print(f"{nm:8s} rtt p50={r.rtt_p50:.0f} p99={r.rtt_p99:.0f}  "
+        print(f"{nm:8s} doorbells p50={r.doorbells_p50:.0f} "
+              f"p99={r.doorbells_p99:.0f}  "
               f"write-bytes median={r.write_bytes_median:.0f}  "
               f"cas_msgs={idx.counters['cas_msgs']}")
         rows.append(csv_row(
             f"fig14/{nm}", r.p50_us,
-            f"rtt_p50={r.rtt_p50:.0f};rtt_p99={r.rtt_p99:.0f};"
+            f"doorbells_p50={r.doorbells_p50:.0f};"
+            f"doorbells_p99={r.doorbells_p99:.0f};"
             f"write_bytes={r.write_bytes_median:.0f};"
             f"cas={idx.counters['cas_msgs']}"))
     return rows
@@ -237,6 +242,73 @@ def scaling_sweep(client_counts=(8, 16, 32, 64), n_ops=512,
                       "systems": list(systems),
                       "partitioned": partitioned})
     print(f"wrote {json_path}")
+    return rows
+
+
+def throughput_sweep(op_counts=(4_096, 16_384, 65_536), records=60_000,
+                     systems=("sherman", "fg+"), warmup_ops=2_048,
+                     json_path="BENCH_throughput.json"):
+    """Harness-performance sweep: wall-clock sim-ops/s and XLA compile
+    counts vs. op count on YCSB-A (the PR 5 shape-stability acceptance).
+
+    Each system warms its jit caches with a ``warmup_ops`` pass on a
+    fresh index, then runs the measured op counts on the same index —
+    bucketed dispatch means the measured passes must trigger (almost) no
+    fresh compilations.  Writes ``BENCH_throughput.json``: per (system,
+    n_ops) wall time, sim-ops/s (wall-clock harness throughput — the
+    ~372 ops/s pre-PR-5 baseline is recorded for trend), compiles during
+    warmup and measurement, plus the simulated Mops/p99 so perf changes
+    in either plane are auditable.
+    """
+    import json as _json
+    import time as _time
+
+    from repro.workloads import SYSTEMS, get_preset, run_workload
+    from repro.workloads.jitstats import count_compiles
+
+    rows, results = [], []
+    spec = get_preset("ycsb-a", load_records=records)
+    print("\n== Throughput sweep (harness wall-clock, YCSB-A) ==")
+    print(f"{'system':10s} {'ops':>7s} {'wall_s':>8s} {'ops/s':>9s} "
+          f"{'warm.c':>7s} {'meas.c':>7s} {'simMops':>8s}")
+    for system in systems:
+        idx = build_index(SYSTEMS[system.lower()], DEFAULT_CFG,
+                          records=records)
+        with count_compiles() as warm:
+            run_workload(idx, spec.replace(ops=warmup_ops), seed=7,
+                         system=system)
+        for n_ops in op_counts:
+            with count_compiles() as meas:
+                t0 = _time.perf_counter()
+                r = run_workload(idx, spec.replace(ops=n_ops), seed=1,
+                                 system=system)
+                wall = _time.perf_counter() - t0
+            entry = dict(system=system, n_ops=n_ops, wall_s=wall,
+                         sim_ops_per_s=n_ops / wall,
+                         compiles_warmup=warm.count,
+                         compiles_measured=meas.count,
+                         compile_counter_available=meas.available,
+                         mops_sim=r.mops, p99_us=r.p99_us)
+            results.append(entry)
+            print(f"{system:10s} {n_ops:7d} {wall:8.2f} "
+                  f"{entry['sim_ops_per_s']:9.0f} {warm.count:7d} "
+                  f"{meas.count:7d} {r.mops:8.2f}")
+            rows.append(csv_row(
+                f"throughput/{system}/{n_ops}", 1e6 * wall / n_ops,
+                f"ops_per_s={entry['sim_ops_per_s']:.0f};"
+                f"compiles={meas.count}"))
+    total_ops = sum(e["n_ops"] for e in results)
+    total_wall = sum(e["wall_s"] for e in results)
+    payload = dict(workload=spec.name, records=records,
+                   batch=spec.batch, warmup_ops=warmup_ops,
+                   baseline_ops_per_s=372,        # pre-PR-5 harness speed
+                   aggregate_ops_per_s=total_ops / total_wall,
+                   results=results)
+    with open(json_path, "w") as f:
+        _json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(f"wrote {json_path} "
+          f"(aggregate {payload['aggregate_ops_per_s']:.0f} ops/s)")
     return rows
 
 

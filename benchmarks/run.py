@@ -17,7 +17,8 @@ def main(argv=None) -> None:
                     help="smaller op counts (CI)")
     ap.add_argument("--only", default="",
                     help="comma list: table1,fig10,fig11,fig12,fig13,"
-                         "fig14,fig15,fig16,cache,ablation,scaling")
+                         "fig14,fig15,fig16,cache,ablation,scaling,"
+                         "throughput")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write rows to PATH (default "
                          "BENCH_paper_figs.json with --json '')")
@@ -53,16 +54,23 @@ def main(argv=None) -> None:
         rows += F.fig_cache_sweep(n_ops=max(1_024, n // 2))
     if want("ablation"):
         # verb-plane ladder; always writes BENCH_ablation.json (the perf
-        # trajectory seed), independent of --json
-        rows += F.ablation_sweep(n_ops=max(1_024, n // 2),
+        # trajectory seed), independent of --json.  Since the PR 5
+        # shape-stable hot path the full sweep runs at paper-ish scale.
+        rows += F.ablation_sweep(n_ops=4_096 if args.quick else 65_536,
                                  records=8_000 if args.quick else 20_000)
     if want("scaling"):
         # multi-CS cluster plane; always writes BENCH_scaling.json (the
         # client-scaling acceptance curve), independent of --json
         rows += F.scaling_sweep(
             client_counts=(8, 16, 32, 64),
-            n_ops=512 if args.quick else 2_048,
+            n_ops=2_048 if args.quick else 32_768,
             records=8_000 if args.quick else 20_000)
+    if want("throughput"):
+        # harness-performance sweep; always writes BENCH_throughput.json
+        # (wall-clock sim-ops/s + XLA compile counts — the PR 5 gate)
+        rows += F.throughput_sweep(
+            op_counts=(65_536,) if args.quick else (4_096, 16_384, 65_536),
+            records=8_000 if args.quick else 60_000)
 
     print("\n# CSV")
     for r in rows:

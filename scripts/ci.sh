@@ -15,6 +15,38 @@ echo "== verb-trace conservation check =="
 python -m pytest -q tests/test_netsim_trace.py -k \
     "conservation or cycle_masks or doorbell"
 
+echo "== vectorized-replay equivalence + compile stability =="
+python -m pytest -q tests/test_throughput.py -k \
+    "simulate_matches or property_simulate or compiles or bucketing"
+
+echo "== throughput smoke gate (writes BENCH_throughput.json) =="
+python benchmarks/run.py --quick --only throughput
+python - <<'EOF'
+import json, math
+
+d = json.load(open("BENCH_throughput.json"))
+assert d["workload"] == "ycsb-a"
+# the PR 5 acceptance floor: >= 20x the ~372 ops/s pre-PR-5 harness
+assert d["aggregate_ops_per_s"] >= 7_500, d["aggregate_ops_per_s"]
+by_sys = {}
+for r in d["results"]:
+    for k in ("wall_s", "sim_ops_per_s", "mops_sim", "p99_us"):
+        assert math.isfinite(r[k]) and r[k] > 0, (r["system"], k, r[k])
+    # bucketed dispatch: (almost) nothing compiles after warmup
+    if r["compile_counter_available"]:
+        assert r["compiles_measured"] <= 8, r
+    by_sys.setdefault(r["system"], []).append(r)
+assert {"sherman", "fg+"} <= set(by_sys), sorted(by_sys)
+big = [r for r in d["results"] if r["n_ops"] >= 65_536]
+assert big, "sweep must include the 65536-op acceptance point"
+for r in big:
+    assert r["sim_ops_per_s"] >= 7_500, (r["system"], r["sim_ops_per_s"])
+print("throughput OK:",
+      " ".join(f"{r['system']}@{r['n_ops']}={r['sim_ops_per_s']:.0f}ops/s"
+               f"(c={r['compiles_measured']})" for r in d["results"]),
+      f"| aggregate {d['aggregate_ops_per_s']:.0f} ops/s")
+EOF
+
 echo "== ablation sweep (verb plane, writes BENCH_ablation.json) =="
 python benchmarks/run.py --quick --only ablation
 python - <<'EOF'
@@ -103,7 +135,8 @@ SPEC_FIELDS = {"name", "read", "insert", "update", "delete", "scan", "rmw",
                "batch"}
 RESULT_FIELDS = {"mops", "p50_us", "p90_us", "p99_us", "counters", "system",
                  "workload", "n_ops", "read_p50_us", "read_p99_us",
-                 "write_p50_us", "write_p99_us", "rtt_p50", "rtt_p99",
+                 "write_p50_us", "write_p99_us", "doorbells_p50",
+                 "doorbells_p99",
                  "write_bytes_median", "op_counts", "cache_hits",
                  "cache_misses", "cache_stale", "cache_hit_rate",
                  "reads_per_lookup", "verbs", "doorbells",
@@ -114,10 +147,10 @@ COUNTER_KEYS = {"phases", "write_ops", "retried_ops", "read_ops",
                 "internal_splits", "root_splits", "split_same_ms",
                 "cas_msgs", "handovers", "msgs", "bytes", "sim_time_s",
                 "cache_hits", "cache_misses", "cache_stale", "lookup_ops",
-                "lookup_rtts", "verbs", "doorbells", "hocl_cas",
+                "lookup_reads", "verbs", "doorbells", "hocl_cas",
                 "flat_cas"}
-FINITE = ("mops", "p50_us", "p90_us", "p99_us", "rtt_p50", "rtt_p99",
-          "write_bytes_median")
+FINITE = ("mops", "p50_us", "p90_us", "p99_us", "doorbells_p50",
+          "doorbells_p99", "write_bytes_median")
 
 for path in ("BENCH_ci_smoke.json", "BENCH_ci_cache.json",
              "BENCH_ci_cluster.json", "BENCH_scaling.json"):

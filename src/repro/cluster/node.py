@@ -4,23 +4,28 @@ A node owns everything the paper gives a compute server privately:
 
 * its **index cache** (:class:`repro.core.cache.IndexCache`) — a private
   replica with its *own* staleness trajectory.  Unlike the single-frontend
-  ``ShermanIndex``, a node is never fed remote CSs' ``WriteStats``: it
+  ``ShermanIndex``, a node is never fed remote CSs' split outputs: it
   learns of remote splits lazily, through version/fence mismatch on its
   own reads or through its periodic sync sweeps
   (``IndexCache.end_round``);
-* its **repair queue** (:class:`repro.core.write.RepairQueue`) — the
-  B-link half-splits *it* created and must complete;
-* its **LLT view** — HOCL conflict grouping runs over the node's own
-  batch only (every lane carries this node's CS id), so local wait queues
-  and handovers are genuinely private.  Cross-CS contention is *not*
-  visible here; it emerges in the scheduler's merged verb timeline
-  (DESIGN.md §11).
+* its **LLT view** — HOCL conflict grouping keys on the node's CS id, so
+  local wait queues and handovers stay genuinely private even inside the
+  scheduler's stacked ``[n_cs*B]``-lane write dispatch (every lane
+  carries its CS id; :func:`repro.core.hocl.group_by_node` groups by
+  ``(cs, node)``).  Cross-CS contention emerges in the merged verb
+  timeline (DESIGN.md §11), never here;
+* its **functional counters** — per-CS op/verb/cache tallies, including
+  the per-trace totals the merged simulation is conservation-checked
+  against.
 
-A node executes op batches against the **shared** memory-side
-:class:`~repro.core.tree.TreeState` (state in, state out — the node holds
-no tree state) and returns per-phase stats dicts; the scheduler turns
-those into verb traces, merges them across the fleet, and prices the
-merged timeline.  Nothing here touches netsim.
+Since PR 5 the *write phases themselves* execute as one stacked
+fleet-wide dispatch owned by the scheduler (:mod:`repro.cluster.sched`),
+which attributes each phase's per-lane structure back to the owning
+node — so this class carries no repair queue anymore (half-splits are
+completed at wave scope by the scheduler's shared fixed-capacity queue).
+Read batches still run per node because each CS descends through its own
+cache image; they are padded to power-of-two buckets
+(:func:`repro.core.api.bucket_size`) so each shape compiles once.
 """
 from __future__ import annotations
 
@@ -30,14 +35,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.api import (_jit_lookup, _jit_range, _jit_range_cached,
-                            _jit_repair, _jit_write_phase, write_stats_dict)
+                            bucket_size, pad_to_bucket)
 from repro.core.cache import IndexCache
 from repro.core.tree import TreeConfig, TreeState
-from repro.core.write import RepairQueue
 
 
 class ClusterNode:
-    """One compute server: private cache + repair queue + LLT grouping."""
+    """One compute server: private cache + LLT grouping + counters."""
 
     def __init__(self, cs_id: int, cfg: TreeConfig, *,
                  cache_bytes: int = 64 << 20,
@@ -53,10 +57,9 @@ class ClusterNode:
                                 sync_every=cache_sync_every,
                                 sync_rounds=sync_rounds,
                                 kernel_mode=kernel_mode)
-        self.repair = RepairQueue.empty(1)
         self.counters = {
             "ops": 0, "write_ops": 0, "read_ops": 0, "retried_ops": 0,
-            "phases": 0, "lookup_ops": 0, "lookup_rtts": 0,
+            "phases": 0, "lookup_ops": 0, "lookup_reads": 0,
             "leaf_splits": 0, "internal_splits": 0, "root_splits": 0,
             "split_same_ms": 0, "handovers": 0, "hocl_cas": 0,
             "flat_cas": 0, "cache_hits": 0, "cache_misses": 0,
@@ -74,146 +77,104 @@ class ClusterNode:
         c["doorbells"] += trace.n_doorbells
         c["bytes"] += trace.total_bytes
 
-    # -- write path --------------------------------------------------------
-    def _carry_repair(self, n: int) -> None:
-        old = self.repair
-        fresh = RepairQueue.empty(n)
-        k = min(n, old.sep.shape[0])
-        self.repair = RepairQueue(
-            sep=fresh.sep.at[:k].set(old.sep[:k]),
-            child=fresh.child.at[:k].set(old.child[:k]),
-            level=fresh.level.at[:k].set(old.level[:k]),
-            valid=fresh.valid.at[:k].set(old.valid[:k]))
+    def note_write_phase(self, sd: dict, mine: np.ndarray,
+                         first_phase: bool, st: TreeState) -> None:
+        """Attribute one stacked write phase's per-lane structure to this
+        CS (``mine`` = this node's active lanes in the stacked batch).
 
-    def write_batch(self, st: TreeState, keys, vals, is_delete,
-                    max_phases: int = 8):
-        """Apply one write batch of this CS's threads to the shared state.
-
-        Returns ``(state, phase_stats)``: the new tree state and one
-        numpy stats dict per executed phase (``api.write_stats_dict``
-        layout — the verb plane's input).  The node's own splits feed its
-        cache's invalidation hook; *remote* CSs stay oblivious.
+        Scalar lock counters are rebuilt from the per-lane masks: each
+        handover-cycle head is one remote HOCL CAS; a lane at global node
+        rank *r* is ``r + 1`` CAS attempts under the flat baseline; every
+        non-head lane was served by a handover.  The node's own leaf
+        splits feed its cache's invalidation hook; *remote* CSs stay
+        oblivious (root splits surface through the root-pointer check on
+        the next image use, internal splits through staleness).
         """
-        keys = jnp.asarray(keys, jnp.int32)
-        n = keys.shape[0]
-        if n == 0:
-            return st, []
-        vals = jnp.asarray(vals, jnp.int32) if vals is not None else \
-            jnp.zeros((n,), jnp.int32)
-        is_del = jnp.broadcast_to(jnp.asarray(is_delete, bool), (n,))
-        cs = jnp.full((n,), self.cs_id, jnp.int32)
-        active = jnp.ones((n,), bool)
-        if self.repair.valid.shape[0] != n:
-            self._carry_repair(n)
-        if self.cache.enabled:
-            route_hits = self.cache.route_hits(st, keys)
-        else:
-            route_hits = np.zeros(n, bool)
+        k = int(mine.sum())
+        if not k:
+            return
         c = self.counters
-        c["write_ops"] += n
-        c["ops"] += n
-        phase_stats = []
-        for phase_no in range(max_phases):
-            st, done, stats, self.repair = _jit_write_phase(
-                self.cfg, st, keys, vals, is_del, active, cs, self.repair)
-            phase_stats.append(write_stats_dict(
-                stats, np.asarray(active), route_hits, int(st.height)))
-            c["phases"] += 1
-            if phase_no:
-                c["retried_ops"] += int(np.asarray(active).sum())
-            self.cache.note_splits(int(stats.n_leaf_splits),
-                                   int(stats.n_internal_splits),
-                                   int(stats.n_root_splits), st)
-            c["leaf_splits"] += int(stats.n_leaf_splits)
-            c["internal_splits"] += int(stats.n_internal_splits)
-            c["root_splits"] += int(stats.n_root_splits)
-            c["split_same_ms"] += int(stats.n_split_same_ms)
-            c["handovers"] += int(stats.handovers)
-            c["hocl_cas"] += int(stats.hocl_remote_cas)
-            c["flat_cas"] += int(stats.flat_remote_cas)
-            active = active & ~done
-            if not bool(jnp.any(active)):
-                break
-        if bool(jnp.any(active)):
-            raise RuntimeError(f"CS {self.cs_id}: write batch did not "
-                               "converge; pool exhausted or max_phases "
-                               "too low")
-        st = self.drain_repairs(st)
-        return st, phase_stats
-
-    def drain_repairs(self, st: TreeState, max_iters: int = 16) -> TreeState:
-        """Complete this CS's outstanding B-link half-splits."""
-        for _ in range(max_iters):
-            if not bool(jnp.any(self.repair.valid)):
-                return st
-            st, self.repair, ni, nr = _jit_repair(self.cfg, st, self.repair)
-            self.counters["internal_splits"] += int(ni)
-            self.counters["root_splits"] += int(nr)
-            self.cache.note_splits(0, int(ni), int(nr), st)
-        if bool(jnp.any(self.repair.valid)):
-            raise RuntimeError(f"CS {self.cs_id}: repair queue did not "
-                               "drain")
-        return st
+        c["phases"] += 1
+        if not first_phase:
+            c["retried_ops"] += k
+        heads = int((np.asarray(sd["cycle_head"]) & mine).sum())
+        n_leaf = int((np.asarray(sd["split_lane"]) & mine).sum())
+        c["leaf_splits"] += n_leaf
+        c["split_same_ms"] += int((np.asarray(sd["split_same_ms"])
+                                   & mine).sum())
+        c["hocl_cas"] += heads
+        c["flat_cas"] += int((np.asarray(sd["node_rank"])[mine] + 1).sum())
+        c["handovers"] += k - heads
+        if n_leaf:
+            self.cache.note_splits(n_leaf, 0, 0, st)
 
     # -- read path ---------------------------------------------------------
     def lookup_batch(self, st: TreeState, keys):
         """Point lookups through this CS's private cache.
 
         Returns ``(values, found, stats)`` where ``stats`` is the read
-        trace's input dict (per-lane remote reads + target leaves)."""
+        trace's input dict (per-lane remote reads + target leaves, padded
+        to the dispatch bucket with an ``active`` prefix mask)."""
         keys = jnp.asarray(keys, jnp.int32)
         n = keys.shape[0]
+        m = bucket_size(n)
+        kp = pad_to_bucket(keys, m)
+        active = np.arange(m) < n
         c = self.counters
         if self.cache.enabled:
-            res, cst = self.cache.lookup(st, keys)
-            c["cache_hits"] += int((cst["hit"] & ~cst["stale"]).sum())
-            c["cache_misses"] += int((~cst["hit"]).sum())
-            c["cache_stale"] += int(cst["stale"].sum())
-            reads = np.asarray(cst["remote_reads"])
-            sd = dict(active=np.ones(n, bool),
+            res, cst = self.cache.lookup(st, kp, n_valid=n)
+            hit, stale = cst["hit"][:n], cst["stale"][:n]
+            c["cache_hits"] += int((hit & ~stale).sum())
+            c["cache_misses"] += int((~hit).sum())
+            c["cache_stale"] += int(stale.sum())
+            reads = cst["remote_reads"]
+            n_reads = int(reads[:n].sum())
+            sd = dict(active=active,
                       cache_hit=cst["hit"] & ~cst["stale"],
                       remote_reads=reads,
                       leaf=np.asarray(res.leaf),
                       height=int(st.height))
         else:
-            res = _jit_lookup(self.cfg, st, keys)
+            res = _jit_lookup(self.cfg, st, kp)
             c["cache_misses"] += n
-            reads = np.full(n, max(int(st.height), 1), np.int64)
-            sd = dict(active=np.ones(n, bool),
-                      cache_hit=np.zeros(n, bool),
+            n_reads = n * max(int(st.height), 1)
+            sd = dict(active=active,
+                      cache_hit=np.zeros(m, bool),
                       leaf=np.asarray(res.leaf),
                       height=int(st.height))
         c["read_ops"] += n
         c["ops"] += n
         c["lookup_ops"] += n
-        c["lookup_rtts"] += int(reads.sum())
-        return np.asarray(res.value), np.asarray(res.found), sd
+        c["lookup_reads"] += n_reads
+        return np.asarray(res.value)[:n], np.asarray(res.found)[:n], sd
 
     def scan_batch(self, st: TreeState, lo, count: int,
                    max_leaves: Optional[int] = None):
         """Range scans; the initial descent consults the private cache."""
         lo = jnp.asarray(lo, jnp.int32)
         n = lo.shape[0]
+        m = bucket_size(n)
+        lo_p = pad_to_bucket(lo, m)
         if max_leaves is None:
             max_leaves = max(4, count)
         if self.cache.enabled:
-            res = _jit_range_cached(self.cfg, st, lo, count, max_leaves,
+            res = _jit_range_cached(self.cfg, st, lo_p, count, max_leaves,
                                     self.cache.image(st))
             hits = np.asarray(res.start_hit)
-            self.cache.note_hits(hits)
+            self.cache.note_hits(hits[:n])
         else:
-            res = _jit_range(self.cfg, st, lo, count, max_leaves)
-            hits = np.zeros(n, bool)
+            res = _jit_range(self.cfg, st, lo_p, count, max_leaves)
+            hits = np.zeros(m, bool)
         n_leaves = np.asarray(res.leaves_read)
-        sd = dict(active=np.ones(n, bool), cache_hit=hits,
+        sd = dict(active=np.arange(m) < n, cache_hit=hits,
                   retries=np.maximum(n_leaves - 1, 0),
                   leaf=np.asarray(res.start_leaf), scan=True,
                   height=int(st.height))
         c = self.counters
         c["read_ops"] += n
         c["ops"] += n
-        return (np.asarray(res.keys), np.asarray(res.vals),
-                np.asarray(res.n)), sd
+        return (np.asarray(res.keys)[:n], np.asarray(res.vals)[:n],
+                np.asarray(res.n)[:n]), sd
 
     # -- coherence tick ----------------------------------------------------
     def end_round(self, st: TreeState) -> None:

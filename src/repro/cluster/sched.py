@@ -3,13 +3,23 @@
 One **round** (scheduler tick) interleaves one op batch per compute
 server (DESIGN.md §11):
 
-1. *Functional plane* — per-CS batches apply to the shared
-   :class:`~repro.core.tree.TreeState` in CS order (CS order is arrival
-   order, the cluster analogue of §8's lane-order rule).  Each node uses
-   only its private cache / repair queue / LLT grouping; remote splits
-   reach it lazily (stale reads, periodic sweeps), never as shared
-   ``WriteStats``.
-2. *Performance plane* — each node's per-phase verb traces are **merged**
+1. *Functional plane* — the fleet's write batches execute as **one
+   stacked ``[n_cs*B]``-lane dispatch** per phase: every lane carries its
+   CS id, so HOCL's LLT grouping keeps wait queues private per CS while
+   the batch applies in lane order (CS order is arrival order, the
+   cluster analogue of §8's lane-order rule — intra-batch dedupe keeps
+   the last lane, i.e. the last CS, exactly like the old sequential
+   apply).  The stacked batch is padded to a power-of-two bucket and the
+   shared fixed-capacity repair queue keeps every phase shape-stable, so
+   a cluster wave costs one jit dispatch per phase instead of ``n_cs``
+   separate JAX calls.  Each node still uses only its private cache
+   (write routing probes each CS's own image for its own lanes); remote
+   splits reach a CS lazily (stale reads, periodic sweeps), never as
+   shared split outputs.  Read waves stay per-CS — each descends through
+   its own cache image — but are bucket-padded so they too compile once.
+2. *Performance plane* — each phase's per-lane structure is split back
+   into per-CS stats (the lane's CS id masks the stacked arrays), turned
+   into per-CS verb traces, **merged**
    (:func:`repro.core.verbs.merge_traces`) and replayed in one
    discrete-event timeline against the shared per-MS NIC and atomic-unit
    FIFOs.  Cross-CS GLT serialization, FG+ retry storms clogging the
@@ -27,13 +37,18 @@ import math
 import warnings
 from typing import Optional, Sequence
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.cluster.node import ClusterNode
 from repro.cluster.streams import ClusterStreams
 from repro.core import hocl, netsim, verbs as V
+from repro.core.api import (REPAIR_CAP, _jit_write_phase, bucket_size,
+                            pad_to_bucket, run_repair_drain,
+                            write_stats_dict)
 from repro.core.netsim import Features, NetConfig, SHERMAN
 from repro.core.tree import TreeConfig, TreeState, bulkload
+from repro.core.write import RepairQueue
 from repro.workloads.keygen import scramble
 from repro.workloads.spec import OP_KINDS, WorkloadSpec
 
@@ -68,15 +83,20 @@ class Cluster:
                         cache_levels=cache_levels, sync_rounds=sync_rounds,
                         kernel_mode=kernel_mode)
             for i in range(n_cs)]
-        # merged-timeline totals (the priced side)
+        # the wave-scope repair queue: half-splits of the stacked dispatch,
+        # fixed capacity so every phase shape compiles once
+        self.repair = RepairQueue.empty(REPAIR_CAP)
+        self._repair_backlog = 0
+        # merged-timeline totals (the priced side) + wave-scope structure
         self.counters = {
             "msgs": 0, "verbs": 0, "doorbells": 0, "bytes": 0.0,
             "cas_msgs": 0, "sim_time_s": 0.0, "merged_waves": 0,
             "rounds": 0, "cross_cs_conflicts": 0,
+            "stacked_phases": 0, "internal_splits": 0, "root_splits": 0,
         }
         self.latencies_write: list[np.ndarray] = []
         self.latencies_read: list[np.ndarray] = []
-        self.rtts_write: list[np.ndarray] = []
+        self.doorbells_write: list[np.ndarray] = []
         self.write_bytes: list[np.ndarray] = []
 
     @property
@@ -110,7 +130,7 @@ class Cluster:
         c["merged_waves"] += 1
         if kind == "write":
             self.latencies_write.append(sim["latency_s"])
-            self.rtts_write.append(sim["rtts"])
+            self.doorbells_write.append(sim["lane_doorbells"])
             self.write_bytes.append(sim["write_bytes"])
         elif kind == "read":
             self.latencies_read.append(sim["latency_s"])
@@ -129,29 +149,108 @@ class Cluster:
 
     # -- cluster waves -----------------------------------------------------
     def write_wave(self, keys_by_cs: Sequence, vals_by_cs=None,
-                   is_delete: bool = False) -> None:
-        """One cluster write wave: every CS's batch, applied in CS order,
-        priced phase-by-phase in one merged timeline."""
-        per_cs_phases: list[list] = []
-        for i, node in enumerate(self.nodes):
-            keys = keys_by_cs[i] if i < len(keys_by_cs) else None
-            if keys is None or len(keys) == 0:
-                per_cs_phases.append([])
+                   is_delete: bool = False, max_phases: int = 8) -> None:
+        """One cluster write wave: every CS's batch, stacked into a single
+        ``[n_cs*B]``-lane jitted dispatch per phase, priced phase-by-phase
+        in one merged timeline."""
+        segs = []
+        for i in range(self.n_cs):
+            k = keys_by_cs[i] if i < len(keys_by_cs) else None
+            if k is None or len(k) == 0:
                 continue
-            vals = vals_by_cs[i] if vals_by_cs is not None else None
-            self.state, phases = node.write_batch(self.state, keys, vals,
-                                                  is_delete)
-            per_cs_phases.append(phases)
-        leaves = [np.asarray(p[0]["leaf"]) for p in per_cs_phases if p]
-        if len(leaves) > 1:
+            k = np.asarray(k, np.int32)
+            if vals_by_cs is not None and vals_by_cs[i] is not None:
+                v = np.asarray(vals_by_cs[i], np.int32)
+            else:
+                v = np.zeros(k.size, np.int32)
+            segs.append((i, k, v))
+        if not segs:
+            return
+        keys = np.concatenate([k for _, k, _ in segs])
+        vals = np.concatenate([v for _, _, v in segs])
+        cs_l = np.concatenate([np.full(k.size, i, np.int32)
+                               for i, k, _ in segs])
+        n = keys.size
+        m = bucket_size(n)
+        keys_j = pad_to_bucket(jnp.asarray(keys), m)
+        vals_j = pad_to_bucket(jnp.asarray(vals), m)
+        cs_j = pad_to_bucket(jnp.asarray(cs_l), m)
+        cs_np = np.pad(cs_l, (0, m - n), constant_values=-1)
+        is_del = jnp.broadcast_to(jnp.asarray(bool(is_delete)), (m,))
+        active = jnp.arange(m) < n
+        # write routing probes each CS's private image for its own lanes;
+        # each CS routes only its own (bucket-padded) segment, so the
+        # work stays O(total lanes) instead of O(n_cs * total lanes)
+        route_hits = np.zeros(m, bool)
+        off = 0
+        for i, k, _ in segs:
+            node = self.nodes[i]
+            node.counters["write_ops"] += k.size
+            node.counters["ops"] += k.size
+            if node.cache.enabled:
+                kp = pad_to_bucket(jnp.asarray(k), bucket_size(k.size))
+                h = node.cache.route_hits(self.state, kp, n_valid=k.size)
+                route_hits[off:off + k.size] = h[:k.size]
+            off += k.size
+        phase_sds = []
+        for phase_no in range(max_phases):
+            self.state, done, stats, self.repair = _jit_write_phase(
+                self.cfg, self.state, keys_j, vals_j, is_del, active,
+                cs_j, self.repair)
+            act_np = np.asarray(active)
+            sd = write_stats_dict(stats, act_np, route_hits,
+                                  int(self.state.height))
+            phase_sds.append(sd)
+            c = self.counters
+            c["stacked_phases"] += 1
+            c["internal_splits"] += int(stats.n_internal_splits)
+            c["root_splits"] += int(stats.n_root_splits)
+            self._repair_backlog = int(stats.repair_backlog)
+            for i, _, _ in segs:
+                self.nodes[i].note_write_phase(
+                    sd, act_np & (cs_np == i),
+                    first_phase=phase_no == 0, st=self.state)
+            active = active & ~done
+            if not bool(jnp.any(active)):
+                break
+        if bool(jnp.any(active)):
+            raise RuntimeError("cluster write wave did not converge; "
+                               "pool exhausted or max_phases too low")
+        self.drain_repairs()
+        # cross-CS conflict decomposition over the first phase's targets
+        sd0 = phase_sds[0]
+        leaves = [np.asarray(sd0["leaf"])[sd0["active"] & (cs_np == i)]
+                  for i, _, _ in segs]
+        if sum(1 for lv in leaves if lv.size) > 1:
             self.counters["cross_cs_conflicts"] += \
                 hocl.cross_cs_contention(leaves)["contended_nodes"]
-        for k in range(max((len(p) for p in per_cs_phases), default=0)):
+        # performance plane: split each phase back into per-CS traces
+        for sd in phase_sds:
             tagged = [(i, netsim.transformed_write_trace(
-                p[k], self.features, self.net, self.cfg))
-                for i, p in enumerate(per_cs_phases) if len(p) > k]
+                dict(sd, active=sd["active"] & (cs_np == i)),
+                self.features, self.net, self.cfg))
+                for i, _, _ in segs]
             self._simulate_merged(tagged, "write")
         self._maintenance()
+
+    def drain_repairs(self, max_iters: int = 16, sync_every: int = 4):
+        """Complete the wave's outstanding B-link half-splits (shared
+        fixed-capacity queue, fleet scope).  Mirrors
+        ``ShermanIndex.drain_repairs``: the jitted step returns the
+        pending count, so the host syncs every ``sync_every`` iterations
+        at most.  Repair-induced splits stay unannounced to the private
+        caches — a root move surfaces through the root-pointer check on
+        the next image use, internal splits through staleness (the lazy
+        coherence protocol)."""
+        if not self._repair_backlog:
+            return
+        (self.state, self.repair, n_int, n_root,
+         self._repair_backlog) = run_repair_drain(
+            self.cfg, self.state, self.repair, max_iters, sync_every)
+        self.counters["internal_splits"] += n_int
+        self.counters["root_splits"] += n_root
+        if self._repair_backlog:
+            raise RuntimeError("cluster repair queue did not drain")
 
     def lookup_wave(self, keys_by_cs: Sequence) -> list:
         """One cluster lookup wave; returns ``(values, found)`` per CS."""
@@ -210,15 +309,19 @@ class Cluster:
     def combined_counters(self) -> dict:
         """One flat counter dict: merged-timeline totals + per-CS sums —
         a superset of ``ShermanIndex.counters`` so cluster runs share the
-        BENCH json schema."""
+        BENCH json schema.  Wave-scope structure (stacked phases,
+        repair-cascade splits) accrues on the cluster's own counters and
+        is added to the per-CS sums here."""
         nt = self.node_totals()
         out = dict(self.counters)
         for k in ("phases", "write_ops", "read_ops", "retried_ops",
-                  "lookup_ops", "lookup_rtts", "leaf_splits",
-                  "internal_splits", "root_splits", "split_same_ms",
+                  "lookup_ops", "lookup_reads", "leaf_splits",
+                  "split_same_ms",
                   "handovers", "hocl_cas", "flat_cas", "cache_hits",
                   "cache_misses", "cache_stale"):
-            out[k] = nt[k]
+            out[k] = nt[k]          # `phases` = per-CS sum, as pre-PR-5
+        for k in ("internal_splits", "root_splits"):
+            out[k] = nt[k] + self.counters[k]   # + wave-scope repairs
         return out
 
     def throughput_mops(self) -> float:

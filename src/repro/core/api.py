@@ -4,13 +4,28 @@
 the paged-KV integration in ``examples/serve_paged.py``) embeds: batched
 insert/delete/lookup/range with the paper's full write path, plus per-phase
 netsim pricing so every paper metric (throughput, latency percentiles,
-round trips, write bytes, retries) falls out of normal use.
+doorbell depth, write bytes, retries) falls out of normal use.
 
 Reads route through the functional CS-side index cache
 (:mod:`repro.core.cache`): a cache-hit lookup costs one remote leaf read,
 a stale hit pays the B-link chase, and a miss retraverses — all three
 outcomes are counted (``cache_hits``/``cache_misses``/``cache_stale``) and
 priced.
+
+Shape stability (the jit-cache discipline every driver relies on):
+
+* every batch entering a jitted entry point is **padded to a power-of-two
+  bucket** (:func:`bucket_size`) with the padding lanes masked inactive,
+  so ``_jit_write_phase``/``_jit_lookup``/``_jit_range``/``_jit_repair``
+  each compile once per bucket instead of once per batch length;
+* the repair queue has a **fixed capacity** (:data:`REPAIR_CAP`)
+  independent of the batch size, so repair steps never trigger a
+  shape-churn recompile (overflowing separators are dropped, which is
+  safe under the B-link invariant — a later traversal rediscovers the
+  half-split);
+* the tree state (and the repair queue) are **donated** to the jitted
+  phases, so XLA updates them in place instead of copying the pool every
+  phase.
 """
 from __future__ import annotations
 
@@ -29,10 +44,34 @@ from repro.core.tree import TreeConfig, TreeState, bulkload, empty_state
 from repro.core.write import RepairQueue
 
 __all__ = ["ShermanIndex", "TreeConfig", "Features", "FG_PLUS", "SHERMAN",
-           "OracleIndex", "IndexCache"]
+           "OracleIndex", "IndexCache", "REPAIR_CAP", "bucket_size",
+           "pad_to_bucket"]
+
+#: Fixed capacity of every driver-owned repair queue.  Independent of the
+#: batch size so ``_jit_repair``/``_jit_write_phase`` compile once; large
+#: enough that one wave's half-splits never overflow in practice (a
+#: dropped separator is still safe — B-link rediscovery).
+REPAIR_CAP = 256
+
+#: Smallest dispatch bucket; batches below this pad up to it.
+BUCKET_MIN = 16
 
 
-@functools.partial(jax.jit, static_argnums=(0,))
+def bucket_size(n: int) -> int:
+    """Smallest power-of-two bucket holding ``n`` lanes (>= BUCKET_MIN)."""
+    return max(BUCKET_MIN, 1 << max(0, int(n) - 1).bit_length())
+
+
+def pad_to_bucket(arr: jnp.ndarray, m: int, fill=0) -> jnp.ndarray:
+    """Pad a [n, ...] batch array to bucket length ``m`` with ``fill``."""
+    n = arr.shape[0]
+    if n == m:
+        return arr
+    pad = jnp.full((m - n,) + arr.shape[1:], fill, arr.dtype)
+    return jnp.concatenate([arr, pad])
+
+
+@functools.partial(jax.jit, static_argnums=(0,), donate_argnums=(1, 7))
 def _jit_write_phase(cfg, st, keys, vals, is_delete, active, cs, repair):
     return write.write_phase(cfg, st, keys, vals, is_delete, active, cs,
                              repair)
@@ -53,10 +92,39 @@ def _jit_range_cached(cfg, st, lo, count, max_leaves, cache_image):
     return ops.range_batch(cfg, st, lo, count, max_leaves, cache_image)
 
 
-@functools.partial(jax.jit, static_argnums=(0,))
+@functools.partial(jax.jit, static_argnums=(0,), donate_argnums=(1, 2))
 def _jit_repair(cfg, st, repair):
+    """One fixed-shape repair step.  Returns the post-step pending count
+    so the drain loop can sync the host every k iterations instead of
+    forcing a device round trip per iteration."""
     st, repair, ni, nr = write.run_repair(cfg, st, repair, iters=2)
-    return st, repair, ni, nr
+    pending = jnp.sum(repair.valid.astype(jnp.int32))
+    return st, repair, ni, nr, pending
+
+
+def run_repair_drain(cfg, state, repair, max_iters: int = 16,
+                     sync_every: int = 4):
+    """Drain a repair queue with k-batched host syncs.
+
+    Runs :func:`_jit_repair` steps back-to-back, accumulating the split
+    counters as device scalars, and checks the jitted step's pending
+    count on the host only every ``sync_every`` iterations.  Returns
+    ``(state, repair, n_internal, n_root, backlog)`` — ``backlog`` is
+    the host-side pending count after the drain (0 when it completed).
+    Shared by ``ShermanIndex.drain_repairs`` and the cluster scheduler's
+    wave-scope drain so their sync semantics cannot diverge.
+    """
+    ni_acc, nr_acc, pending = [], [], None
+    for it in range(max_iters):
+        state, repair, ni, nr, pending = _jit_repair(cfg, state, repair)
+        ni_acc.append(ni)
+        nr_acc.append(nr)
+        # one step usually clears a write batch's handful of separators,
+        # so check after the first step too, then every sync_every
+        if (it == 0 or (it + 1) % sync_every == 0) and not int(pending):
+            break
+    return (state, repair, sum(int(x) for x in ni_acc),
+            sum(int(x) for x in nr_acc), int(pending))
 
 
 def write_stats_dict(stats: write.WriteStats, active, route_hits,
@@ -107,14 +175,15 @@ class ShermanIndex:
             "internal_splits": 0, "root_splits": 0, "split_same_ms": 0,
             "cas_msgs": 0, "handovers": 0, "msgs": 0, "bytes": 0.0,
             "sim_time_s": 0.0, "cache_hits": 0, "cache_misses": 0,
-            "cache_stale": 0, "lookup_ops": 0, "lookup_rtts": 0,
+            "cache_stale": 0, "lookup_ops": 0, "lookup_reads": 0,
             "verbs": 0, "doorbells": 0, "hocl_cas": 0, "flat_cas": 0,
         }
         self.latencies_write: list[np.ndarray] = []
         self.latencies_read: list[np.ndarray] = []
-        self.rtts_write: list[np.ndarray] = []
+        self.doorbells_write: list[np.ndarray] = []
         self.write_bytes: list[np.ndarray] = []
-        self._repair = RepairQueue.empty(1)
+        self._repair = RepairQueue.empty(REPAIR_CAP)
+        self._repair_backlog = 0        # host-side mirror, no device sync
 
     # -- constructors --------------------------------------------------
     @classmethod
@@ -127,10 +196,15 @@ class ShermanIndex:
         return cls(cfg, bulkload(cfg, np.zeros(0), np.zeros(0)), **kw)
 
     # -- helpers --------------------------------------------------------
-    def _cs_of(self, n: int) -> jnp.ndarray:
-        """Lane -> compute-server assignment (contiguous blocks)."""
+    def _cs_of(self, n: int, m: int | None = None) -> jnp.ndarray:
+        """Lane -> compute-server assignment (contiguous blocks).
+
+        Block size comes from the *real* batch length ``n`` so the
+        distribution over CSs matches the unpadded batch; the returned
+        array spans the dispatch bucket ``m`` (padding lanes get a label
+        too, but they are inactive everywhere)."""
         per = max(1, -(-n // self.cfg.n_cs))
-        return (jnp.arange(n, dtype=jnp.int32) // per) % self.cfg.n_cs
+        return (jnp.arange(m or n, dtype=jnp.int32) // per) % self.cfg.n_cs
 
     def _price_cache_maintenance(self):
         """Charge the image fills / version sweeps the cache performed
@@ -157,7 +231,7 @@ class ShermanIndex:
         priced = netsim.price_write_phase(sd, self.features, self.net,
                                           self.cfg)
         self.latencies_write.append(priced["latency_s"])
-        self.rtts_write.append(priced["rtts"])
+        self.doorbells_write.append(priced["lane_doorbells"])
         self.write_bytes.append(priced["write_bytes"])
         self._charge(priced)
         c = self.counters
@@ -177,19 +251,20 @@ class ShermanIndex:
         n = keys.shape[0]
         if n == 0:
             return
+        m = bucket_size(n)
         vals = jnp.asarray(vals, jnp.int32) if vals is not None else \
             jnp.zeros((n,), jnp.int32)
-        is_del = jnp.broadcast_to(jnp.asarray(is_delete, bool), (n,))
-        cs = self._cs_of(n)
-        active = jnp.ones((n,), bool)
-        if self._repair.valid.shape[0] != n:
-            self._carry_repair(n)
+        keys = pad_to_bucket(keys, m)
+        vals = pad_to_bucket(vals, m)
+        is_del = jnp.broadcast_to(jnp.asarray(is_delete, bool), (m,))
+        cs = self._cs_of(n, m)
+        active = jnp.arange(m) < n           # padding lanes stay inactive
         # the writes' traversal leg routes through the CS cache like a read;
         # probe once per batch (retry phases reuse the same routing)
         if self.cache.enabled:
-            route_hits = self.cache.route_hits(self.state, keys)
+            route_hits = self.cache.route_hits(self.state, keys, n_valid=n)
         else:
-            route_hits = np.zeros(n, bool)
+            route_hits = np.zeros(m, bool)
         # each client op counts once; lanes resubmitted by later phases
         # are tracked separately so throughput isn't inflated
         self.counters["write_ops"] += n
@@ -204,6 +279,7 @@ class ShermanIndex:
             self.cache.note_splits(int(stats.n_leaf_splits),
                                    int(stats.n_internal_splits),
                                    int(stats.n_root_splits), self.state)
+            self._repair_backlog = int(stats.repair_backlog)
             active = active & ~done
             if not bool(jnp.any(active)):
                 break
@@ -213,27 +289,24 @@ class ShermanIndex:
         self.drain_repairs()
         self._price_cache_maintenance()
 
-    def _carry_repair(self, n: int):
-        old = self._repair
-        fresh = RepairQueue.empty(n)
-        k = min(n, old.sep.shape[0])
-        self._repair = RepairQueue(
-            sep=fresh.sep.at[:k].set(old.sep[:k]),
-            child=fresh.child.at[:k].set(old.child[:k]),
-            level=fresh.level.at[:k].set(old.level[:k]),
-            valid=fresh.valid.at[:k].set(old.valid[:k]))
+    def drain_repairs(self, max_iters: int = 16, sync_every: int = 4):
+        """Complete any outstanding B-link half-splits.
 
-    def drain_repairs(self, max_iters: int = 16):
-        """Complete any outstanding B-link half-splits."""
-        for _ in range(max_iters):
-            if not bool(jnp.any(self._repair.valid)):
-                return
-            self.state, self._repair, ni, nr = _jit_repair(
-                self.cfg, self.state, self._repair)
-            self.counters["internal_splits"] += int(ni)
-            self.counters["root_splits"] += int(nr)
-            self.cache.note_splits(0, int(ni), int(nr), self.state)
-        if bool(jnp.any(self._repair.valid)):
+        The jitted repair step returns the post-step pending count, so
+        the loop touches the host only every ``sync_every`` iterations
+        (and not at all when the last write phase reported an empty
+        queue) instead of forcing a device sync per iteration.
+        """
+        if not self._repair_backlog:
+            return
+        (self.state, self._repair, n_int, n_root,
+         self._repair_backlog) = run_repair_drain(
+            self.cfg, self.state, self._repair, max_iters, sync_every)
+        self.counters["internal_splits"] += n_int
+        self.counters["root_splits"] += n_root
+        if n_int or n_root:
+            self.cache.note_splits(0, n_int, n_root, self.state)
+        if self._repair_backlog:
             raise RuntimeError("repair queue did not drain")
 
     def insert(self, keys, vals):
@@ -247,22 +320,26 @@ class ShermanIndex:
     def lookup(self, keys):
         keys = jnp.asarray(keys, jnp.int32)
         n = keys.shape[0]
+        m = bucket_size(n)
+        kp = pad_to_bucket(keys, m)
         c = self.counters
+        active = np.arange(m) < n
         if self.cache.enabled:
-            res, cst = self.cache.lookup(self.state, keys)
-            c["cache_hits"] += int((cst["hit"] & ~cst["stale"]).sum())
-            c["cache_misses"] += int((~cst["hit"]).sum())
-            c["cache_stale"] += int(cst["stale"].sum())
-            sd = dict(active=np.ones(n, bool),
+            res, cst = self.cache.lookup(self.state, kp, n_valid=n)
+            hit, stale = cst["hit"][:n], cst["stale"][:n]
+            c["cache_hits"] += int((hit & ~stale).sum())
+            c["cache_misses"] += int((~hit).sum())
+            c["cache_stale"] += int(stale.sum())
+            sd = dict(active=active,
                       cache_hit=cst["hit"] & ~cst["stale"],
                       remote_reads=cst["remote_reads"],
                       leaf=np.asarray(res.leaf),
                       height=int(self.state.height))
         else:
-            res = _jit_lookup(self.cfg, self.state, keys)
+            res = _jit_lookup(self.cfg, self.state, kp)
             c["cache_misses"] += n
-            sd = dict(active=np.ones(n, bool),
-                      cache_hit=np.zeros(n, bool),
+            sd = dict(active=active,
+                      cache_hit=np.zeros(m, bool),
                       leaf=np.asarray(res.leaf),
                       height=int(self.state.height))
         priced = netsim.price_read_phase(sd, self.features, self.net,
@@ -270,40 +347,43 @@ class ShermanIndex:
         self.latencies_read.append(priced["latency_s"])
         c["read_ops"] += n
         c["lookup_ops"] += n
-        c["lookup_rtts"] += int(np.asarray(priced["rtts"]).sum())
+        c["lookup_reads"] += int(np.asarray(priced["lane_doorbells"]).sum())
         self._charge(priced)
         self._price_cache_maintenance()
-        return np.asarray(res.value), np.asarray(res.found)
+        return np.asarray(res.value)[:n], np.asarray(res.found)[:n]
 
     def range(self, lo, count: int, max_leaves: Optional[int] = None):
         lo = jnp.asarray(lo, jnp.int32)
+        n = lo.shape[0]
+        m = bucket_size(n)
+        lo_p = pad_to_bucket(lo, m)
         if max_leaves is None:
             # Leaves may be sparse (deletes don't merge — §5.3 notes the same
             # partial-occupancy artifact), so scan generously.
             max_leaves = max(4, count)
         # the scan's initial descent consults the CS cache like a lookup
         if self.cache.enabled:
-            res = _jit_range_cached(self.cfg, self.state, lo, count,
+            res = _jit_range_cached(self.cfg, self.state, lo_p, count,
                                     max_leaves,
                                     self.cache.image(self.state))
             hits = np.asarray(res.start_hit)
-            self.cache.note_hits(hits)
+            self.cache.note_hits(hits[:n])
         else:
-            res = _jit_range(self.cfg, self.state, lo, count, max_leaves)
-            hits = np.zeros(lo.shape[0], bool)
+            res = _jit_range(self.cfg, self.state, lo_p, count, max_leaves)
+            hits = np.zeros(m, bool)
         n_leaves = np.asarray(res.leaves_read)
         priced = netsim.price_read_phase(
-            dict(active=np.ones(lo.shape[0], bool), cache_hit=hits,
+            dict(active=np.arange(m) < n, cache_hit=hits,
                  retries=np.maximum(n_leaves - 1, 0),  # empty scans read 0
                  leaf=np.asarray(res.start_leaf), scan=True,
                  height=int(self.state.height)),
             self.features, self.net, self.cfg)
         self.latencies_read.append(priced["latency_s"])
-        self.counters["read_ops"] += lo.shape[0]
+        self.counters["read_ops"] += n
         self._charge(priced)
         self._price_cache_maintenance()
-        return (np.asarray(res.keys), np.asarray(res.vals),
-                np.asarray(res.n))
+        return (np.asarray(res.keys)[:n], np.asarray(res.vals)[:n],
+                np.asarray(res.n)[:n])
 
     # -- reporting ---------------------------------------------------------
     def latency_percentiles(self, kind: str = "write"):

@@ -431,33 +431,42 @@ class IndexCache:
                 self.sync_versions(st)
 
     # -- lookups -----------------------------------------------------------
-    def lookup(self, st: TreeState, qkeys: jax.Array
-               ) -> tuple[LookupResult, dict]:
+    def lookup(self, st: TreeState, qkeys: jax.Array,
+               n_valid: Optional[int] = None) -> tuple[LookupResult, dict]:
         """Batched cached lookup; returns the result plus numpy stats
-        (``hit``/``stale``/``remote_reads`` per lane) for netsim."""
+        (``hit``/``stale``/``remote_reads`` per lane) for netsim.
+
+        ``n_valid`` marks the real batch length when the caller padded
+        ``qkeys`` to a dispatch bucket (:func:`repro.core.api.bucket_size`)
+        — the returned arrays stay full width, but only the first
+        ``n_valid`` lanes touch the counters and the lazy invalidation.
+        """
         img = self.image(st)
         res, cst = _jit_cached_lookup(self.cfg, st, img, qkeys,
                                       self.chase_hops, self.kernel_mode)
         hit = np.asarray(cst.hit)
         stale = np.asarray(cst.stale)
         reads = np.asarray(cst.remote_reads)
-        self.counters.hits += int((hit & ~stale).sum())
-        self.counters.misses += int((~hit).sum())
-        self.counters.stale += int(stale.sum())
-        self.counters.remote_reads += int(reads.sum())
-        if stale.any():                      # lazy invalidation on detection
-            self.invalidate_covering(np.asarray(qkeys)[stale])
+        k = hit.shape[0] if n_valid is None else int(n_valid)
+        self.counters.hits += int((hit[:k] & ~stale[:k]).sum())
+        self.counters.misses += int((~hit[:k]).sum())
+        self.counters.stale += int(stale[:k].sum())
+        self.counters.remote_reads += int(reads[:k].sum())
+        if stale[:k].any():                  # lazy invalidation on detection
+            self.invalidate_covering(np.asarray(qkeys)[:k][stale[:k]])
         return res, dict(hit=hit, stale=stale, remote_reads=reads)
 
-    def route_hits(self, st: TreeState, qkeys: jax.Array) -> np.ndarray:
+    def route_hits(self, st: TreeState, qkeys: jax.Array,
+                   n_valid: Optional[int] = None) -> np.ndarray:
         """Descent-only hit mask (no state mutation of the counters' stale
-        plane) — used to price the traversal leg of write ops."""
+        plane) — used to price the traversal leg of write ops.  With
+        ``n_valid``, padding lanes beyond it stay out of the counters."""
         if not self.enabled:
             return np.zeros(np.asarray(qkeys).shape[0], bool)
         img = self.image(st)
         _, hit, _ = _jit_route(img, qkeys, self.cfg.max_height)
         hit = np.asarray(hit)
-        self.note_hits(hit)
+        self.note_hits(hit if n_valid is None else hit[:int(n_valid)])
         return hit
 
     def note_hits(self, hit: np.ndarray) -> None:

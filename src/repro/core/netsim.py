@@ -2,12 +2,25 @@
 
 The container has no RDMA fabric, so — exactly like the paper explains its
 own numbers in §5.5 — performance is *derived* from the functional plane.
-What changed from the original counter-pricing model: the functional plane
-now emits a structured **verb trace** (:mod:`repro.core.verbs` — one record
-per READ/WRITE/CAS a real CS would post, with target MS, payload, doorbell
-grouping and dependency links), and this module replays that trace in an
-event loop against per-MS resources.  Per-op latency, tail percentiles and
-phase makespan *fall out of the replay* instead of closed-form formulas.
+The functional plane emits a structured **verb trace**
+(:mod:`repro.core.verbs` — one record per READ/WRITE/CAS a real CS would
+post, with target MS, payload, doorbell grouping and dependency links),
+and this module replays that trace against per-MS resources.  Per-op
+latency, tail percentiles and phase makespan *fall out of the replay*
+instead of closed-form formulas.
+
+Two equivalent replay engines share one integer time grid (picoseconds,
+so event ordering is exact and deterministic — no float tie-breaking):
+
+* :func:`simulate` — the production engine: a vectorized
+  structure-of-arrays replay (topological wavefront over ``dep``/``dep2``
+  with a conservative time horizon, per-MS lexsort + cumulative-max
+  service times).  Interpreter cost scales with the number of *waves*,
+  not the number of verbs, so paper-scale traces replay in milliseconds.
+* :func:`simulate_ref` — the original per-verb heapq event loop, kept as
+  the executable specification.  ``simulate`` is exactly equivalent
+  (same int64 completion times; asserted by tests/test_throughput.py on
+  real SHERMAN/FG+/merged-cluster traces).
 
 Resources (paper sources):
 
@@ -26,8 +39,8 @@ Sherman's feature toggles carry **no closed-form constants here**; they are
   * ``twolevel``     → :func:`repro.core.verbs.twolevel_writes`
   * ``onchip``       → the atomic-unit service-time *resource parameter*.
 
-Event-loop semantics and the verb taxonomy are documented in
-docs/DESIGN.md §10.
+Event-loop semantics, the verb taxonomy, and the wavefront algorithm's
+exactness argument are documented in docs/DESIGN.md §10.
 """
 from __future__ import annotations
 
@@ -37,6 +50,11 @@ import heapq
 import numpy as np
 
 from repro.core import verbs as V
+
+#: Integer time grid: one tick = 1 ps.  All service times, RTTs and
+#: ``at`` floors are rounded onto the grid once, so both replay engines
+#: do exact int64 arithmetic and make identical ordering decisions.
+PS_PER_S = 1e12
 
 
 @dataclasses.dataclass(frozen=True)
@@ -76,12 +94,54 @@ class NetConfig:
 
 
 # --------------------------------------------------------------------------
-# the event loop
+# shared grid + result assembly
 # --------------------------------------------------------------------------
 
-def simulate(trace: V.VerbTrace, net: NetConfig, n_ms: int,
-             onchip: bool) -> dict:
-    """Replay one phase's verb trace against per-MS resources.
+def _grid_times(trace: V.VerbTrace, net: NetConfig, onchip: bool):
+    """Round one trace's timing constants onto the shared ps grid."""
+    svc = np.rint(np.maximum(1.0 / net.nic_iops_small,
+                             trace.nbytes / net.nic_bw_Bps) * PS_PER_S)
+    cas = (net.cas_onchip_s if onchip else net.cas_pcie_s) * PS_PER_S
+    return (svc.astype(np.int64), int(round(cas)),
+            int(round(net.rtt_s * PS_PER_S)),
+            np.rint(np.asarray(trace.at) * PS_PER_S).astype(np.int64))
+
+
+def _empty_sim(n_lanes: int) -> dict:
+    return dict(latency_s=np.zeros(n_lanes), makespan_s=0.0,
+                lane_doorbells=np.zeros(n_lanes, np.int64),
+                write_bytes=np.zeros(n_lanes),
+                msgs=0, verbs=0, bytes=0.0, cas_msgs=0, doorbells=0)
+
+
+def _finish_sim(trace: V.VerbTrace, comp_ps: np.ndarray) -> dict:
+    """Fold per-verb completion ticks into the phase's reported totals.
+
+    ``lane_doorbells`` is the per-lane doorbell-ring count
+    (``VerbTrace.per_lane_doorbells`` in :mod:`repro.core.verbs`) — the
+    sequential posting-depth metric; for read phases every READ is its
+    own ring, so there it equals the lane's remote reads.
+    """
+    comp = comp_ps * (1.0 / PS_PER_S)
+    lat = np.zeros(trace.n_lanes)
+    lm = trace.lane >= 0
+    np.maximum.at(lat, trace.lane[lm], comp[lm])
+    return dict(latency_s=lat, makespan_s=float(comp.max()),
+                lane_doorbells=trace.per_lane_doorbells(),
+                write_bytes=trace.per_lane_write_bytes(),
+                msgs=trace.n_verbs, verbs=trace.n_verbs,
+                bytes=trace.total_bytes,
+                cas_msgs=trace.n_cas, doorbells=trace.n_doorbells)
+
+
+# --------------------------------------------------------------------------
+# the reference event loop (executable specification)
+# --------------------------------------------------------------------------
+
+def simulate_ref(trace: V.VerbTrace, net: NetConfig, n_ms: int,
+                 onchip: bool) -> dict:
+    """Per-verb heapq replay — the specification :func:`simulate` must
+    match tick-for-tick.
 
     Every verb is posted when its gates (``dep``/``dep2`` completions and
     its ``at`` floor) allow, occupies the target MS's NIC message unit
@@ -90,25 +150,15 @@ def simulate(trace: V.VerbTrace, net: NetConfig, n_ms: int,
     service.  Verbs sharing a doorbell inherit the head's gates (set by
     the combine transformation), so they post together and per-MS FIFO
     order keeps in-order delivery.
-
-    Returns per-lane latency (completion of the lane's last verb — the
-    wave starts at t=0), the phase makespan, and trace totals.
     """
     n = trace.n_verbs
-    n_lanes = trace.n_lanes
     if n == 0:
-        return dict(latency_s=np.zeros(n_lanes), makespan_s=0.0,
-                    rtts=np.zeros(n_lanes, np.int64),
-                    write_bytes=np.zeros(n_lanes),
-                    msgs=0, verbs=0, bytes=0.0, cas_msgs=0, doorbells=0)
-
-    svc = np.maximum(1.0 / net.nic_iops_small,
-                     trace.nbytes / net.nic_bw_Bps).tolist()
-    cas_s = net.cas_onchip_s if onchip else net.cas_pcie_s
-    rtt = net.rtt_s
+        return _empty_sim(trace.n_lanes)
+    svc_a, cas_s, rtt, at_a = _grid_times(trace, net, onchip)
+    svc = svc_a.tolist()
     kind = trace.kind.tolist()
     ms = trace.ms.tolist()
-    at = trace.at.tolist()
+    at = at_a.tolist()
     dep = trace.dep.tolist()
     dep2 = trace.dep2.tolist()
 
@@ -123,9 +173,9 @@ def simulate(trace: V.VerbTrace, net: NetConfig, n_ms: int,
     heap = [(at[i], i) for i in np.nonzero(
         (trace.dep < 0) & (trace.dep2 < 0))[0].tolist()]
     heapq.heapify(heap)
-    nic_free = [0.0] * n_ms
-    atomic_free = [0.0] * n_ms
-    comp = [0.0] * n
+    nic_free = [0] * n_ms
+    atomic_free = [0] * n_ms
+    comp = [0] * n
     push, pop = heapq.heappush, heapq.heappop
     while heap:
         t, i = pop(heap)
@@ -150,16 +200,137 @@ def simulate(trace: V.VerbTrace, net: NetConfig, n_ms: int,
                 if j >= 0 and comp[j] > r:
                     r = comp[j]
                 push(heap, (r, c))
+    return _finish_sim(trace, np.asarray(comp, np.int64))
 
-    comp = np.asarray(comp)
-    lat = np.zeros(n_lanes)
-    lm = trace.lane >= 0
-    np.maximum.at(lat, trace.lane[lm], comp[lm])
-    return dict(latency_s=lat, makespan_s=float(comp.max()),
-                rtts=trace.per_lane_doorbells(),
-                write_bytes=trace.per_lane_write_bytes(),
-                msgs=n, verbs=n, bytes=trace.total_bytes,
-                cas_msgs=trace.n_cas, doorbells=trace.n_doorbells)
+
+# --------------------------------------------------------------------------
+# the vectorized wavefront replay (the production engine)
+# --------------------------------------------------------------------------
+
+def simulate(trace: V.VerbTrace, net: NetConfig, n_ms: int,
+             onchip: bool) -> dict:
+    """Vectorized structure-of-arrays replay, exactly equivalent to
+    :func:`simulate_ref`.
+
+    Instead of popping one verb at a time, each **wave** batch-services
+    every dependency-released verb whose ready time lies below a
+    conservative horizon ``T = min(ready) + min(svc) + rtt``: any verb
+    still gated by an unfinished dependency completes no earlier than
+    ``ready + svc + rtt`` of some released verb, so nothing outside the
+    wave can undercut it in its MS's FIFO (DESIGN.md §10 has the full
+    argument).  The wave is serviced per MS with a lexsort +
+    cumulative-max prefix recurrence (the closed form of the sequential
+    ``d_j = max(ready_j, d_{j-1}) + svc_j`` FIFO recursion, seeded with
+    the MS's carried busy time), CAS verbs pass through the same
+    recurrence again on the atomic unit, and completions release the
+    verbs gated on them.  All arithmetic is int64 ticks on the shared
+    grid, so ordering ties resolve identically to the reference loop.
+    """
+    n = trace.n_verbs
+    if n == 0:
+        return _empty_sim(trace.n_lanes)
+    svc, cas_ps, rtt_ps, at = _grid_times(trace, net, onchip)
+    ms = trace.ms.astype(np.int64)
+    kind = trace.kind
+    dep, dep2 = trace.dep, trace.dep2
+    has1, has2 = dep >= 0, dep2 >= 0
+    # child adjacency in CSR form (one edge per dep/dep2 gate)
+    par = np.concatenate([dep[has1], dep2[has2]])
+    chd = np.concatenate([np.flatnonzero(has1), np.flatnonzero(has2)])
+    o = np.argsort(par, kind="stable")
+    par_s, chd_s = par[o], chd[o]
+    coff = np.searchsorted(par_s, np.arange(n + 1))
+    npend = has1.astype(np.int32) + has2.astype(np.int32)
+    d1 = np.where(has1, dep, 0)
+    d2 = np.where(has2, dep2, 0)
+
+    comp = np.zeros(n, np.int64)
+    nic_free = np.zeros(n_ms, np.int64)
+    atomic_free = np.zeros(n_ms, np.int64)
+    look = int(svc.min()) + rtt_ps       # conservative horizon increment
+
+    # static frontier: verbs with no gates, consumed as a sorted cursor
+    root = np.flatnonzero(npend == 0)
+    ro = np.lexsort((root, at[root]))
+    root = root[ro]
+    root_at = at[root]
+    rp = 0
+    dyn_i = np.zeros(0, np.int64)        # dependency-released pool
+    dyn_r = np.zeros(0, np.int64)
+    done = 0
+    while done < n:
+        if rp < root.size:
+            tstar = int(root_at[rp])
+            if dyn_r.size:
+                dmin = int(dyn_r.min())
+                if dmin < tstar:
+                    tstar = dmin
+        elif dyn_r.size:
+            tstar = int(dyn_r.min())
+        else:                            # pool empty => dependency cycle
+            raise ValueError("verb trace contains a dependency cycle")
+        T = tstar + look
+        np_ = rp + int(np.searchsorted(root_at[rp:], T, side="left"))
+        S = root[rp:np_]
+        R = root_at[rp:np_]
+        rp = np_
+        if dyn_i.size:
+            m_ = dyn_r < T
+            S = np.concatenate([S, dyn_i[m_]])
+            R = np.concatenate([R, dyn_r[m_]])
+            dyn_i, dyn_r = dyn_i[~m_], dyn_r[~m_]
+        # FIFO-service the wave per MS: (ms, ready, idx) order matches the
+        # reference heap's pop order exactly (ticks are exact ints)
+        o2 = np.lexsort((S, R, ms[S]))
+        S, R = S[o2], R[o2]
+        msS = ms[S]
+        starts = np.flatnonzero(
+            np.concatenate([[True], msS[1:] != msS[:-1]]))
+        bounds = np.append(starts, S.size)
+        svcS = svc[S]
+        c = np.cumsum(svcS)
+        base = R - (c - svcS)
+        d = np.empty(S.size, np.int64)
+        for a, b in zip(bounds[:-1], bounds[1:]):
+            m0 = msS[a]
+            hi = np.maximum.accumulate(
+                np.maximum(base[a:b], nic_free[m0] - (c[a] - svcS[a])))
+            d[a:b] = c[a:b] + hi
+            nic_free[m0] = d[b - 1]
+        cm = kind[S] == V.CAS
+        if cm.any():
+            cpos = np.flatnonzero(cm)
+            ca = cas_ps * np.arange(1, cpos.size + 1, dtype=np.int64)
+            base2 = d[cpos] - (ca - cas_ps)
+            seg_of = np.searchsorted(starts, cpos, side="right")
+            cb = np.flatnonzero(
+                np.concatenate([[True], seg_of[1:] != seg_of[:-1]]))
+            cbounds = np.append(cb, cpos.size)
+            for a, b in zip(cbounds[:-1], cbounds[1:]):
+                m0 = msS[cpos[a]]
+                hi = np.maximum.accumulate(
+                    np.maximum(base2[a:b],
+                               atomic_free[m0] - (ca[a] - cas_ps)))
+                d[cpos[a:b]] = ca[a:b] + hi
+                atomic_free[m0] = d[cpos[b - 1]]
+        comp[S] = d + rtt_ps
+        done += S.size
+        # release the verbs gated on this wave's completions
+        a_, b_ = coff[S], coff[S + 1]
+        cnt = b_ - a_
+        tot = int(cnt.sum())
+        if tot:
+            off_ = np.arange(tot) - np.repeat(np.cumsum(cnt) - cnt, cnt)
+            kids = chd_s[np.repeat(a_, cnt) + off_]
+            np.subtract.at(npend, kids, 1)
+            nk = np.unique(kids[npend[kids] == 0])
+            if nk.size:
+                r_ = np.maximum(at[nk], np.maximum(
+                    np.where(has1[nk], comp[d1[nk]], 0),
+                    np.where(has2[nk], comp[d2[nk]], 0)))
+                dyn_i = np.concatenate([dyn_i, nk])
+                dyn_r = np.concatenate([dyn_r, r_])
+    return _finish_sim(trace, comp)
 
 
 def transformed_write_trace(stats: dict, feat: Features, net: NetConfig,
@@ -234,9 +405,7 @@ def price_read_phase(stats: dict, feat: Features, net: NetConfig, cfg):
     (see :func:`read_trace_from_stats` for the trace semantics)."""
     n = int(np.asarray(stats["active"], bool).sum())
     if n == 0:
-        return dict(latency_s=np.zeros(0), makespan_s=0.0, mops=0.0,
-                    rtts=np.zeros(0, np.int64), msgs=0, verbs=0, bytes=0.0,
-                    cas_msgs=0, doorbells=0)
+        return dict(_empty_sim(0), mops=0.0)
     tr = read_trace_from_stats(stats, cfg)
     sim = simulate(tr, net, cfg.n_ms, feat.onchip)
     sim["mops"] = n / sim["makespan_s"] / 1e6 if sim["makespan_s"] else 0.0

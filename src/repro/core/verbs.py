@@ -120,8 +120,9 @@ class VerbTrace:
         return out
 
     def per_lane_doorbells(self, include_spin: bool = False) -> np.ndarray:
-        """Doorbell rings per lane — the sequential round-trip depth
-        metric reported as ``rtts`` (SPIN load excluded by default)."""
+        """Doorbell rings per lane — the sequential posting-depth metric
+        netsim reports as ``lane_doorbells`` (SPIN load excluded by
+        default)."""
         m = self.doorbell_heads & (self.lane >= 0)
         if not include_spin:
             m &= self.role != SPIN

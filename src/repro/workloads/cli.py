@@ -113,11 +113,11 @@ def main(argv: Optional[list] = None) -> str:
                                      cache_bytes=args.cache_bytes,
                                      cache_levels=args.cache_levels)
     print(f"{'system':18s} {'Mops':>8s} {'p50us':>8s} {'p99us':>10s} "
-          f"{'rtt50':>6s} {'wr.B':>7s} {'hit%':>6s} {'rd/l':>5s} "
+          f"{'dbl50':>6s} {'wr.B':>7s} {'hit%':>6s} {'rd/l':>5s} "
           f"{'dbells':>8s} {'saved':>7s}")
     for r in results:
         print(f"{r.system:18s} {r.mops:8.2f} {r.p50_us:8.1f} "
-              f"{r.p99_us:10.1f} {r.rtt_p50:6.0f} "
+              f"{r.p99_us:10.1f} {r.doorbells_p50:6.0f} "
               f"{r.write_bytes_median:7.0f} {100 * r.cache_hit_rate:6.1f} "
               f"{r.reads_per_lookup:5.2f} {r.doorbells:8d} "
               f"{r.doorbells_saved:7d}")

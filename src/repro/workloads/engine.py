@@ -3,9 +3,9 @@
 One engine for every perf claim in the repo: benchmarks, examples, and CI
 all come through :func:`run_workload`, which executes the spec's op mix in
 batched waves and derives a structured :class:`RunResult` (throughput,
-latency percentiles, round trips, write bytes, per-op-type counters) from
-the index's netsim counters.  Results serialize to ``BENCH_*.json`` via
-:func:`write_json`.
+latency percentiles, doorbell depth, write bytes, per-op-type counters)
+from the index's netsim counters.  Results serialize to ``BENCH_*.json``
+via :func:`write_json`.
 """
 from __future__ import annotations
 
@@ -58,8 +58,12 @@ class RunResult:
     read_p99_us: float = 0.0
     write_p50_us: float = 0.0
     write_p99_us: float = 0.0
-    rtt_p50: float = 0.0
-    rtt_p99: float = 0.0
+    # Doorbell-ring depth per write op (netsim ``lane_doorbells``): the
+    # sequential posting-depth metric.  Until PR 5 these fields were
+    # (mis)named ``rtt_p50``/``rtt_p99`` — the value was always doorbell
+    # rings, which only coincide with round trips when nothing combines.
+    doorbells_p50: float = 0.0
+    doorbells_p99: float = 0.0
     write_bytes_median: float = 0.0
     op_counts: dict = dataclasses.field(default_factory=dict)
     # CS-side index cache outcome of this run (repro.core.cache):
@@ -140,7 +144,7 @@ def run_workload(idx: ShermanIndex, spec: WorkloadSpec, *, seed: int = 1,
     rng = np.random.default_rng(seed)
     c0 = dict(idx.counters)
     lw0, lr0 = len(idx.latencies_write), len(idx.latencies_read)
-    rt0, wb0 = len(idx.rtts_write), len(idx.write_bytes)
+    db0, wb0 = len(idx.doorbells_write), len(idx.write_bytes)
 
     n_records = spec.load_records      # live records (grows with inserts)
     cursor = spec.load_records         # next sequential insertion rank
@@ -182,10 +186,10 @@ def run_workload(idx: ShermanIndex, spec: WorkloadSpec, *, seed: int = 1,
     sim_s = idx.counters["sim_time_s"] - c0.get("sim_time_s", 0.0)
     lat_w = _cat(idx.latencies_write[lw0:])
     lat_r = _cat(idx.latencies_read[lr0:])
-    rtts = _cat(idx.rtts_write[rt0:])
+    dbells = _cat(idx.doorbells_write[db0:])
     wb = _cat(idx.write_bytes[wb0:])
     delta = {k: idx.counters[k] - c0.get(k, 0) for k in idx.counters}
-    return _summarize(spec, delta, done, sim_s, lat_w, lat_r, rtts, wb,
+    return _summarize(spec, delta, done, sim_s, lat_w, lat_r, dbells, wb,
                       system=system,
                       op_counts={k: v for k, v in op_counts.items() if v})
 
@@ -193,12 +197,12 @@ def run_workload(idx: ShermanIndex, spec: WorkloadSpec, *, seed: int = 1,
 def _cat(arrs) -> np.ndarray:
     """Concatenate a (possibly empty) list of per-phase sample arrays.
     Empty runs yield a size-0 array — every percentile over it is guarded
-    (the ``rtt_p50``/``rtt_p99`` empty-run crash fix)."""
+    (the ``doorbells_p50``/``doorbells_p99`` empty-run crash fix)."""
     return np.concatenate(arrs) if arrs else np.zeros(0)
 
 
 def _summarize(spec: WorkloadSpec, delta: dict, done: int, sim_s: float,
-               lat_w, lat_r, rtts, wb, *, system: str = "",
+               lat_w, lat_r, dbells, wb, *, system: str = "",
                op_counts: Optional[dict] = None, **extra) -> RunResult:
     """Fold one run's counter deltas + latency samples into a RunResult.
     Shared by the single-frontend and cluster drivers; all percentile
@@ -217,14 +221,15 @@ def _summarize(spec: WorkloadSpec, delta: dict, done: int, sim_s: float,
         counters=delta, system=system, workload=spec.name, n_ops=done,
         read_p50_us=pct(lat_r, 50), read_p99_us=pct(lat_r, 99),
         write_p50_us=pct(lat_w, 50), write_p99_us=pct(lat_w, 99),
-        rtt_p50=pct(rtts, 50, 1.0), rtt_p99=pct(rtts, 99, 1.0),
+        doorbells_p50=pct(dbells, 50, 1.0),
+        doorbells_p99=pct(dbells, 99, 1.0),
         write_bytes_median=float(np.median(wb)) if wb.size else 0.0,
         op_counts=op_counts or {},
         cache_hits=delta["cache_hits"], cache_misses=delta["cache_misses"],
         cache_stale=delta["cache_stale"],
         cache_hit_rate=(delta["cache_hits"] / cache_total
                         if cache_total else 0.0),
-        reads_per_lookup=(delta["lookup_rtts"] / delta["lookup_ops"]
+        reads_per_lookup=(delta["lookup_reads"] / delta["lookup_ops"]
                           if delta["lookup_ops"] else 0.0),
         verbs=delta["verbs"], doorbells=delta["doorbells"],
         doorbells_saved=delta["verbs"] - delta["doorbells"],
@@ -264,7 +269,7 @@ def run_cluster_workload(spec: WorkloadSpec, features: Features, *,
 
     ``n_clients`` concurrent client threads are spread over
     ``min(cfg.n_cs, n_clients)`` compute servers, each with a private
-    index cache / repair queue / LLT; every wave is priced by merging the
+    index cache / LLT view; every wave is priced by merging the
     fleet's verb traces into one shared-resource timeline.  The result
     carries the per-CS breakdown (``per_cs``) and the merged-vs-functional
     ``conservation_ok`` invariant.
@@ -293,7 +298,7 @@ def run_cluster_workload(spec: WorkloadSpec, features: Features, *,
     return _summarize(
         spec, delta, done, delta["sim_time_s"],
         _cat(cluster.latencies_write), _cat(cluster.latencies_read),
-        _cat(cluster.rtts_write), _cat(cluster.write_bytes),
+        _cat(cluster.doorbells_write), _cat(cluster.write_bytes),
         system=system, op_counts=op_counts, n_clients=cluster.n_clients,
         rounds=delta["rounds"], per_cs=per_cs,
         conservation_ok=cluster.conservation_ok())

@@ -1,0 +1,59 @@
+"""XLA compile-count instrumentation for the shape-stability discipline.
+
+Every jitted entry point in the hot path (:mod:`repro.core.api`) pads its
+batch to a power-of-two bucket and keeps the repair queue at a fixed
+capacity, so a steady-state workload must not trigger *any* fresh XLA
+compilation after its warmup batch.  This module counts compilations so
+benchmarks (``benchmarks/run.py --only throughput``) can report them and
+CI / tests (``tests/test_throughput.py``) can regress on them.
+
+The count hooks ``MeshComputation.compile`` — the single funnel every
+XLA build passes through on the jax pinned in this container (0.4.x);
+jit-cache hits never reach it, so the tally is *distinct compilations*,
+not dispatches.  (``jax.monitoring`` events were considered and
+rejected: on this version they fire per compile *request* — cache hits
+included — and listeners cannot be unregistered.)  If a future jax
+moves the internals, :func:`count_compiles` degrades to ``available =
+False`` / ``count == -1`` rather than miscounting, and the consumers
+skip their assertions.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+
+
+@dataclasses.dataclass
+class CompileStats:
+    """Mutable compile tally, readable while the context is active."""
+    count: int = 0
+    available: bool = True
+
+
+@contextlib.contextmanager
+def count_compiles():
+    """Count XLA compilations (not jit-cache hits) inside the context.
+
+    >>> with count_compiles() as stats:
+    ...     run_workload(...)
+    >>> stats.count
+    """
+    stats = CompileStats()
+    try:
+        from jax._src.interpreters import pxla
+        orig = pxla.MeshComputation.compile
+    except Exception:
+        stats.available = False
+        stats.count = -1
+        yield stats
+        return
+
+    def counted(self, *a, **kw):
+        stats.count += 1
+        return orig(self, *a, **kw)
+
+    pxla.MeshComputation.compile = counted
+    try:
+        yield stats
+    finally:
+        pxla.MeshComputation.compile = orig

@@ -36,7 +36,7 @@ def test_read_only_hits_and_single_remote_read():
     c = idx.counters
     assert c["cache_hits"] == 1_024 and c["cache_misses"] == 0
     assert c["cache_stale"] == 0
-    assert c["lookup_rtts"] == c["lookup_ops"] == 1_024   # exactly 1 read/op
+    assert c["lookup_reads"] == c["lookup_ops"] == 1_024   # exactly 1 read/op
     assert idx.cache.hit_ratio == 1.0
 
 
@@ -59,7 +59,7 @@ def test_disabled_cache_pays_full_traversals():
     c = idx.counters
     assert c["cache_hits"] == 0 and c["cache_misses"] == 256
     height = int(idx.state.height)
-    assert c["lookup_rtts"] == 256 * height
+    assert c["lookup_reads"] == 256 * height
 
 
 def test_partial_cache_levels_price_partial_descent():
@@ -74,7 +74,7 @@ def test_partial_cache_levels_price_partial_descent():
     assert c["cache_hits"] == 0 and c["cache_misses"] == 256
     height = int(idx.state.height)
     assert height > 3                  # deep enough for a partial descent
-    assert c["lookup_rtts"] == 256 * (height - 2)
+    assert c["lookup_reads"] == 256 * (height - 2)
 
 
 # -- stale path ------------------------------------------------------------
@@ -214,7 +214,7 @@ def test_cache_maintenance_is_priced():
     idx = _fresh(records=2_000)
     idx.lookup(_ranks(0, 16))                   # triggers the first fill
     assert idx.cache.counters.fill_reads > 0
-    assert idx.counters["msgs"] > idx.counters["lookup_rtts"]
+    assert idx.counters["msgs"] > idx.counters["lookup_reads"]
 
 
 # -- eviction / budget -----------------------------------------------------
@@ -250,7 +250,7 @@ def test_counter_accounting_identity():
     c = idx.counters
     assert c["cache_hits"] + c["cache_misses"] + c["cache_stale"] \
         == c["lookup_ops"] == 1_400
-    assert c["lookup_rtts"] >= c["lookup_ops"]
+    assert c["lookup_reads"] >= c["lookup_ops"]
 
 
 # -- versioned invalidation ------------------------------------------------

@@ -307,7 +307,7 @@ def test_scaling_advantage_grows_with_clients():
 # --------------------------------------------------------------------------
 
 def test_empty_run_reports_zero_not_inf():
-    """Satellite fixes: a zero-op run must neither crash the rtt
+    """Satellite fixes: a zero-op run must neither crash the doorbell
     percentiles nor leak Infinity into the json export."""
     import math
     from repro.core import ShermanIndex
@@ -316,10 +316,10 @@ def test_empty_run_reports_zero_not_inf():
     assert idx.throughput_mops() == 0.0
     spec = get_preset("ycsb-a", load_records=0, ops=0, batch=128)
     r = run_workload(idx, spec, system="sherman")
-    for v in (r.mops, r.rtt_p50, r.rtt_p99, r.p50_us, r.p99_us,
-              r.write_bytes_median):
+    for v in (r.mops, r.doorbells_p50, r.doorbells_p99, r.p50_us,
+              r.p99_us, r.write_bytes_median):
         assert math.isfinite(v), r
-    assert r.mops == 0.0 and r.rtt_p99 == 0.0
+    assert r.mops == 0.0 and r.doorbells_p99 == 0.0
     json.dumps(r.to_dict())
 
 

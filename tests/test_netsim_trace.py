@@ -159,10 +159,10 @@ def test_read_trace_conservation_without_cache():
     base = rng.choice(50_000, size=2_000, replace=False)
     idx = ShermanIndex.build(CFG, base, base, cache_bytes=0)
     n, height = 256, int(idx.state.height)
-    m0, r0 = idx.counters["msgs"], idx.counters["lookup_rtts"]
+    m0, r0 = idx.counters["msgs"], idx.counters["lookup_reads"]
     idx.lookup(base[:n].astype(np.int32))
     assert idx.counters["msgs"] - m0 == n * height
-    assert idx.counters["lookup_rtts"] - r0 == n * height
+    assert idx.counters["lookup_reads"] - r0 == n * height
     assert idx.counters["doorbells"] == idx.counters["verbs"]  # reads never
     # combine: the next address depends on the previous read (§4.5)
 
@@ -180,7 +180,7 @@ def test_empty_scan_retries_clamped():
              height=2),
         SHERMAN, NET, CFG)
     assert priced["msgs"] == 4 * 2
-    assert (np.asarray(priced["rtts"]) >= 1).all()
+    assert (np.asarray(priced["lane_doorbells"]) >= 1).all()
 
 
 def test_write_ops_counted_once_across_retry_phases():

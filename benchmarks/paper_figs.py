@@ -245,6 +245,45 @@ def scaling_sweep(client_counts=(8, 16, 32, 64), n_ops=512,
     return rows
 
 
+def load_sweep_bench(n_ops=2_048, records=8_000, n_clients=16,
+                     preset="write-intensive", arrival="poisson",
+                     json_path="BENCH_load.json"):
+    """Open-loop load sweep through the serving plane (DESIGN.md §12):
+    latency vs offered load, queueing delay separated from service time,
+    SLO attainment, and max-sustainable-load per system.
+
+    Writes ``BENCH_load.json`` — the serving-plane acceptance artifact:
+    per (system, offered rate) one RunResult whose sojourn p99 bends up
+    and whose ``sustained_frac`` collapses past each system's knee, plus
+    the self-calibrated ``capacity_mops`` / ``max_sustainable_mops``
+    summary.  The headline is SHERMAN sustaining a higher offered load
+    than FG+ on the write-heavy mix.
+    """
+    from repro.serve import load_sweep
+    payload = load_sweep(preset, arrival=arrival, n_clients=n_clients,
+                         load_records=records, ops=n_ops, out=json_path)
+    rows = []
+    print(f"\n== Load sweep ({preset}, {arrival}, "
+          f"{n_clients} clients) ==")
+    print(f"{'system':10s} {'offered':>8s} {'p50us':>8s} {'p99us':>9s} "
+          f"{'queue':>7s} {'svc':>6s} {'slo%':>6s} {'sust%':>6s}")
+    for r in payload["results"]:
+        print(f"{r['system']:10s} {r['offered_mops']:8.3f} "
+              f"{r['p50_us']:8.2f} {r['p99_us']:9.2f} "
+              f"{r['queue_mean_us']:7.2f} {r['service_mean_us']:6.2f} "
+              f"{100 * r['slo_attainment']:6.1f} "
+              f"{100 * r['sustained_frac']:6.1f}")
+        rows.append(csv_row(
+            f"load/{r['system']}/{r['offered_mops']:.3f}", r["p50_us"],
+            f"p99us={r['p99_us']:.2f};queue_us={r['queue_mean_us']:.2f};"
+            f"sustained={r['sustained_frac']:.3f}"))
+    for name, cap in payload["capacity_mops"].items():
+        print(f"  {name}: closed capacity {cap:.3f} Mops, max sustainable "
+              f"{payload['max_sustainable_mops'][name]:.3f} Mops")
+    print(f"wrote {json_path}")
+    return rows
+
+
 def throughput_sweep(op_counts=(4_096, 16_384, 65_536), records=60_000,
                      systems=("sherman", "fg+"), warmup_ops=2_048,
                      json_path="BENCH_throughput.json"):

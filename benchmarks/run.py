@@ -18,7 +18,7 @@ def main(argv=None) -> None:
     ap.add_argument("--only", default="",
                     help="comma list: table1,fig10,fig11,fig12,fig13,"
                          "fig14,fig15,fig16,cache,ablation,scaling,"
-                         "throughput")
+                         "throughput,load")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write rows to PATH (default "
                          "BENCH_paper_figs.json with --json '')")
@@ -65,6 +65,13 @@ def main(argv=None) -> None:
             client_counts=(8, 16, 32, 64),
             n_ops=2_048 if args.quick else 32_768,
             records=8_000 if args.quick else 20_000)
+    if want("load"):
+        # open-loop serving plane; always writes BENCH_load.json (the
+        # latency-vs-offered-load acceptance curve), independent of --json
+        rows += F.load_sweep_bench(
+            n_ops=1_024 if args.quick else 8_192,
+            records=4_000 if args.quick else 20_000,
+            n_clients=16)
     if want("throughput"):
         # harness-performance sweep; always writes BENCH_throughput.json
         # (wall-clock sim-ops/s + XLA compile counts — the PR 5 gate)

@@ -109,6 +109,51 @@ print("scaling OK:",
       "->".join(f"{by[('sherman', n)]['p99_us']:.1f}" for n in counts))
 EOF
 
+echo "== open-loop load sweep (serving plane, writes BENCH_load.json) =="
+python benchmarks/run.py --quick --only load
+python - <<'EOF'
+import json, math
+
+d = json.load(open("BENCH_load.json"))
+assert d["kind"] == "load_sweep"
+systems = set(d["capacity_mops"])
+assert systems == {"sherman", "fg+"}, systems
+rates = d["rates_mops"]
+assert len(rates) >= 4, ("need >= 4 offered-load points", rates)
+by = {}
+for r in d["results"]:
+    assert r["arrival"] == d["arrival"], r["arrival"]
+    # queueing delay must be reported separately from service time
+    assert math.isfinite(r["queue_mean_us"]) and r["queue_mean_us"] >= 0
+    assert math.isfinite(r["service_mean_us"]) and r["service_mean_us"] > 0
+    assert math.isfinite(r["p99_us"]) and r["p99_us"] > 0
+    assert 0 <= r["slo_attainment"] <= 1, r["slo_attainment"]
+    assert 0 < r["sustained_frac"] <= 1, r["sustained_frac"]
+    assert r["conservation_ok"], (r["system"], r["offered_mops"])
+    by.setdefault(r["system"], []).append(r)
+for s in systems:
+    assert len(by[s]) == len(rates), (s, len(by[s]), len(rates))
+    # max sustainable load: finite, positive, one of the swept rates
+    ms = d["max_sustainable_mops"][s]
+    assert math.isfinite(ms) and ms > 0, (s, ms)
+    assert any(abs(ms - r) < 1e-9 for r in rates), (s, ms, rates)
+# the write-optimized system sustains >= the baseline's offered load
+# on the write-heavy preset
+assert d["max_sustainable_mops"]["sherman"] >= \
+    d["max_sustainable_mops"]["fg+"], d["max_sustainable_mops"]
+print("load OK:",
+      " ".join(f"{s}: cap={d['capacity_mops'][s]:.2f} "
+               f"sustained<={d['max_sustainable_mops'][s]:.2f}Mops"
+               for s in sorted(systems)),
+      f"| {len(rates)} rates, slo={d['slo_us']:.1f}us")
+EOF
+
+echo "== open-loop CLI smoke (poisson arrivals) =="
+python -m repro.workloads --preset write-intensive --quick \
+    --records 4000 --ops 256 --batch 128 --systems sherman \
+    --n-clients 8 --arrival poisson --rate 0.5 \
+    --json BENCH_ci_open.json
+
 echo "== cluster CLI smoke (2 CS, write-intensive) =="
 python -m repro.workloads --preset write-intensive --quick \
     --records 4000 --ops 256 --batch 128 --systems sherman \
@@ -132,7 +177,8 @@ import json, math
 
 SPEC_FIELDS = {"name", "read", "insert", "update", "delete", "scan", "rmw",
                "distribution", "theta", "scan_len", "load_records", "ops",
-               "batch"}
+               "batch", "arrival", "offered_mops", "burst_factor",
+               "burst_frac", "diurnal_period_s", "diurnal_peak"}
 RESULT_FIELDS = {"mops", "p50_us", "p90_us", "p99_us", "counters", "system",
                  "workload", "n_ops", "read_p50_us", "read_p99_us",
                  "write_p50_us", "write_p99_us", "doorbells_p50",
@@ -141,7 +187,10 @@ RESULT_FIELDS = {"mops", "p50_us", "p90_us", "p99_us", "counters", "system",
                  "cache_misses", "cache_stale", "cache_hit_rate",
                  "reads_per_lookup", "verbs", "doorbells",
                  "doorbells_saved", "retried_ops", "n_clients", "rounds",
-                 "per_cs", "conservation_ok"}
+                 "per_cs", "conservation_ok", "arrival", "offered_mops",
+                 "queue_mean_us", "queue_p50_us", "queue_p99_us",
+                 "service_mean_us", "slo_us", "slo_attainment",
+                 "sustained_frac"}
 COUNTER_KEYS = {"phases", "write_ops", "retried_ops", "read_ops",
                 "leaf_splits",
                 "internal_splits", "root_splits", "split_same_ms",
@@ -153,7 +202,8 @@ FINITE = ("mops", "p50_us", "p90_us", "p99_us", "doorbells_p50",
           "doorbells_p99", "write_bytes_median")
 
 for path in ("BENCH_ci_smoke.json", "BENCH_ci_cache.json",
-             "BENCH_ci_cluster.json", "BENCH_scaling.json"):
+             "BENCH_ci_cluster.json", "BENCH_scaling.json",
+             "BENCH_ci_open.json", "BENCH_load.json"):
     d = json.load(open(path))
     missing = SPEC_FIELDS - set(d["spec"])
     assert not missing, (path, "spec missing", missing)
@@ -179,6 +229,12 @@ cl = json.load(open("BENCH_ci_cluster.json"))["results"][0]
 assert cl["n_clients"] == 2 and len(cl["per_cs"]) == 2, \
     (cl["n_clients"], len(cl["per_cs"]))
 assert cl["conservation_ok"] and cl["rounds"] > 0
+
+op = json.load(open("BENCH_ci_open.json"))["results"][0]
+assert op["arrival"] == "poisson" and op["offered_mops"] > 0
+assert op["queue_mean_us"] >= 0 and op["service_mean_us"] > 0, \
+    (op["queue_mean_us"], op["service_mean_us"])
+assert 0 < op["sustained_frac"] <= 1
 print("BENCH schema OK; cache smoke:",
       f"hit_rate={c['cache_hit_rate']:.3f}",
       f"reads/lookup={c['reads_per_lookup']:.2f};",

@@ -33,6 +33,7 @@ cluster's conservation invariant, exported as ``conservation_ok``.
 """
 from __future__ import annotations
 
+import hashlib
 import math
 import warnings
 from typing import Optional, Sequence
@@ -98,6 +99,12 @@ class Cluster:
         self.latencies_read: list[np.ndarray] = []
         self.doorbells_write: list[np.ndarray] = []
         self.write_bytes: list[np.ndarray] = []
+        # open-loop serving plane (enable_open_loop; DESIGN.md §12):
+        self.clock: Optional[netsim.ServerClock] = None
+        self.queue_write: list[np.ndarray] = []   # per-op queueing delay
+        self.queue_read: list[np.ndarray] = []
+        self.last_read_comp: dict = {}  # cs -> absolute lookup completions
+        self.trace_log: Optional[list] = None     # merged-trace digests
 
     @property
     def n_cs(self) -> int:
@@ -109,34 +116,97 @@ class Cluster:
               **kw) -> "Cluster":
         return cls(cfg, bulkload(cfg, keys, vals, fill=fill), **kw)
 
+    # -- open-loop mode / trace digests ------------------------------------
+    def enable_open_loop(self) -> None:
+        """Switch the performance plane onto one absolute timeline
+        (the serving plane, DESIGN.md §12): waves replay against a
+        carried per-MS :class:`~repro.core.netsim.ServerClock`, per-op
+        sojourns are measured from explicit arrival timestamps, and
+        ``sim_time_s`` becomes the absolute horizon (max completion)
+        instead of a sum of per-phase makespans."""
+        self.clock = netsim.ServerClock.fresh(self.cfg.n_ms)
+
+    def record_traces(self) -> None:
+        """Log a structural digest of every merged trace — everything
+        but the ``at`` release floors, which are *when*, not *what* — so
+        open- and closed-loop runs can be compared wave-for-wave
+        (the t=0 differential test in tests/test_serve_queueing.py)."""
+        self.trace_log = []
+
+    @staticmethod
+    def _trace_digest(kind: str, merged) -> tuple:
+        h = hashlib.sha1()
+        for a in (merged.kind, merged.role, merged.ms, merged.nbytes,
+                  merged.lane, merged.doorbell, merged.dep, merged.dep2):
+            h.update(np.ascontiguousarray(a).tobytes())
+        return (kind, merged.n_verbs, merged.n_doorbells, h.hexdigest())
+
     # -- merged pricing ----------------------------------------------------
-    def _simulate_merged(self, tagged, kind: str) -> None:
+    def _simulate_merged(self, tagged, kind: str, arrivals=None):
         """Merge per-CS traces (``tagged`` = [(cs, trace), ...]) and price
-        the shared timeline; attribute functional totals per CS."""
+        the shared timeline; attribute functional totals per CS.
+
+        Closed loop (default): every wave starts its own timeline at t=0
+        and ``sim_time_s`` accumulates makespans.  Open loop
+        (:meth:`enable_open_loop`): the wave replays on the carried
+        absolute :class:`ServerClock` timeline; ``arrivals`` (a dict
+        ``cs -> per-lane arrival seconds``, aligned with that CS's trace
+        lanes) turns absolute completions into per-op sojourns and the
+        replay's NIC/atomic waits into queueing-delay samples.  Returns
+        ``(sim, kept)`` where ``kept`` lists the CS ids actually merged
+        (in lane order) — the write wave uses it to fold multi-phase
+        completions back onto ops.
+        """
         tagged = [(cs, t) for cs, t in tagged if t.n_verbs]
         if not tagged:
-            return
+            return None, []
         for cs, t in tagged:
             self.nodes[cs].note_trace(t)
         sim, merged = netsim.price_merged_phase(
-            [t for _, t in tagged], self.features, self.net, self.cfg)
+            [t for _, t in tagged], self.features, self.net, self.cfg,
+            clock=self.clock)
+        if self.trace_log is not None:
+            self.trace_log.append(self._trace_digest(kind, merged))
         c = self.counters
         c["msgs"] += sim["msgs"]
         c["verbs"] += sim["verbs"]
         c["doorbells"] += sim["doorbells"]
         c["bytes"] += sim["bytes"]
         c["cas_msgs"] += sim["cas_msgs"]
-        c["sim_time_s"] += sim["makespan_s"]
+        if self.clock is not None:
+            # absolute timeline: the horizon is the latest completion
+            c["sim_time_s"] = max(c["sim_time_s"], sim["makespan_s"])
+        else:
+            c["sim_time_s"] += sim["makespan_s"]
         c["merged_waves"] += 1
         if kind == "write":
-            self.latencies_write.append(sim["latency_s"])
             self.doorbells_write.append(sim["lane_doorbells"])
             self.write_bytes.append(sim["write_bytes"])
+            if self.clock is None:
+                self.latencies_write.append(sim["latency_s"])
+            # open loop: write_wave folds multi-phase completions into
+            # per-op sojourns itself (one sample per op, not per phase)
         elif kind == "read":
-            self.latencies_read.append(sim["latency_s"])
+            if self.clock is None:
+                self.latencies_read.append(sim["latency_s"])
+            elif arrivals is not None:
+                off = 0
+                self.last_read_comp = {}
+                for cs, t in tagged:
+                    nl = t.n_lanes
+                    comp = sim["latency_s"][off:off + nl]
+                    self.last_read_comp[cs] = comp
+                    self.latencies_read.append(comp - arrivals[cs])
+                    self.queue_read.append(
+                        sim["lane_queue_s"][off:off + nl])
+                    off += nl
+        return sim, [cs for cs, _ in tagged]
 
     def _maintenance(self) -> None:
-        """Price the fleet's cache maintenance (fills + sweeps), merged."""
+        """Price the fleet's cache maintenance (fills + sweeps), merged.
+        In open-loop mode the background verbs are released at the
+        current horizon — maintenance generated by a wave cannot start
+        before the wave was admitted."""
         tagged = []
         for i, node in enumerate(self.nodes):
             nr, sr = node.take_maintenance()
@@ -145,14 +215,25 @@ class Cluster:
                     nr, sr, self.cfg.n_ms, self.cfg.node_bytes,
                     self.net.small_io_bytes,
                     rows_ms=node.cache.rows_ms())))
+        if self.clock is not None and tagged:
+            t0 = self.counters["sim_time_s"]
+            tagged = [(i, V.shift_release(t, np.zeros(t.n_lanes), t0))
+                      for i, t in tagged]
         self._simulate_merged(tagged, "maint")
 
     # -- cluster waves -----------------------------------------------------
     def write_wave(self, keys_by_cs: Sequence, vals_by_cs=None,
-                   is_delete: bool = False, max_phases: int = 8) -> None:
+                   is_delete: bool = False, max_phases: int = 8,
+                   arrivals_by_cs=None) -> None:
         """One cluster write wave: every CS's batch, stacked into a single
         ``[n_cs*B]``-lane jitted dispatch per phase, priced phase-by-phase
-        in one merged timeline."""
+        in one merged timeline.
+
+        In open-loop mode ``arrivals_by_cs[i]`` gives CS *i*'s per-op
+        release times (absolute seconds); each retry phase is released
+        by the op's previous phase completion (``release = max(release,
+        completion)``), and one sojourn/queueing sample per *op* (not
+        per phase) lands in ``latencies_write`` / ``queue_write``."""
         segs = []
         for i in range(self.n_cs):
             k = keys_by_cs[i] if i < len(keys_by_cs) else None
@@ -225,12 +306,47 @@ class Cluster:
             self.counters["cross_cs_conflicts"] += \
                 hocl.cross_cs_contention(leaves)["contended_nodes"]
         # performance plane: split each phase back into per-CS traces
+        open_mode = self.clock is not None
+        if open_mode:
+            arr_full = np.zeros(m, np.float64)
+            off = 0
+            for i, k, _ in segs:
+                if arrivals_by_cs is not None and \
+                        arrivals_by_cs[i] is not None:
+                    arr_full[off:off + k.size] = np.asarray(
+                        arrivals_by_cs[i], np.float64)
+                off += k.size
+            op_comp = arr_full.copy()      # per-op absolute completion
+            op_queue = np.zeros(m)         # per-op NIC/atomic queueing
+            release = arr_full.copy()      # next phase's release floor
         for sd in phase_sds:
-            tagged = [(i, netsim.transformed_write_trace(
-                dict(sd, active=sd["active"] & (cs_np == i)),
-                self.features, self.net, self.cfg))
-                for i, _, _ in segs]
-            self._simulate_merged(tagged, "write")
+            masks = {i: sd["active"] & (cs_np == i) for i, _, _ in segs}
+            tagged = []
+            for i, _, _ in segs:
+                t = netsim.transformed_write_trace(
+                    dict(sd, active=masks[i]), self.features, self.net,
+                    self.cfg)
+                if open_mode and t.n_verbs:
+                    t = V.shift_release(t, release[masks[i]])
+                tagged.append((i, t))
+            sim, kept = self._simulate_merged(tagged, "write")
+            if open_mode and sim is not None:
+                lanes = {i: t.n_lanes for i, t in tagged if t.n_verbs}
+                off = 0
+                for i in kept:
+                    nl = lanes[i]
+                    idxs = np.flatnonzero(masks[i])[:nl]
+                    op_comp[idxs] = sim["latency_s"][off:off + nl]
+                    op_queue[idxs] += sim["lane_queue_s"][off:off + nl]
+                    off += nl
+                release = np.maximum(release, op_comp)
+        if open_mode:
+            off = 0
+            for i, k, _ in segs:
+                sl = slice(off, off + k.size)
+                self.latencies_write.append(op_comp[sl] - arr_full[sl])
+                self.queue_write.append(op_queue[sl])
+                off += k.size
         self._maintenance()
 
     def drain_repairs(self, max_iters: int = 16, sync_every: int = 4):
@@ -252,7 +368,21 @@ class Cluster:
         if self._repair_backlog:
             raise RuntimeError("cluster repair queue did not drain")
 
-    def lookup_wave(self, keys_by_cs: Sequence) -> list:
+    def _shift_reads(self, tagged, arrivals_by_cs):
+        """Open-loop read release: trace lanes align with the CS's input
+        key order (node batches are bucket-padded, actives first), so a
+        per-lane shift by that CS's arrival times is exact."""
+        if self.clock is None or arrivals_by_cs is None:
+            return tagged, None
+        arrs, shifted = {}, []
+        for i, t in tagged:
+            a = np.asarray(arrivals_by_cs[i], np.float64)[:t.n_lanes]
+            arrs[i] = a
+            shifted.append((i, V.shift_release(t, a)))
+        return shifted, arrs
+
+    def lookup_wave(self, keys_by_cs: Sequence,
+                    arrivals_by_cs=None) -> list:
         """One cluster lookup wave; returns ``(values, found)`` per CS."""
         tagged, out = [], []
         for i, node in enumerate(self.nodes):
@@ -263,12 +393,14 @@ class Cluster:
             vals, found, sd = node.lookup_batch(self.state, keys)
             tagged.append((i, netsim.read_trace_from_stats(sd, self.cfg)))
             out.append((vals, found))
-        self._simulate_merged(tagged, "read")
+        tagged, arrs = self._shift_reads(tagged, arrivals_by_cs)
+        self._simulate_merged(tagged, "read", arrivals=arrs)
         self._maintenance()
         return out
 
     def scan_wave(self, lo_by_cs: Sequence, count: int,
-                  max_leaves: Optional[int] = None) -> list:
+                  max_leaves: Optional[int] = None,
+                  arrivals_by_cs=None) -> list:
         """One cluster scan wave; returns ``(keys, vals, n)`` per CS."""
         tagged, out = [], []
         for i, node in enumerate(self.nodes):
@@ -279,7 +411,8 @@ class Cluster:
             res, sd = node.scan_batch(self.state, lo, count, max_leaves)
             tagged.append((i, netsim.read_trace_from_stats(sd, self.cfg)))
             out.append(res)
-        self._simulate_merged(tagged, "read")
+        tagged, arrs = self._shift_reads(tagged, arrivals_by_cs)
+        self._simulate_merged(tagged, "read", arrivals=arrs)
         self._maintenance()
         return out
 

@@ -93,6 +93,39 @@ class NetConfig:
     handover_max: int = 4
 
 
+@dataclasses.dataclass
+class ServerClock:
+    """Carried per-MS busy frontiers (int64 ps) — the open-loop serving
+    plane's absolute shared timeline.
+
+    Closed-loop phase pricing starts every MS idle at t=0: each phase is
+    its own relative timeline and makespans are summed.  Passing a clock
+    to :func:`simulate` / :func:`simulate_ref` instead seeds the NIC
+    message unit and atomic unit from the carried busy times and writes
+    the advanced frontiers back, so successive waves replay on ONE
+    absolute timeline: an op whose ``at`` release gate says it arrived at
+    absolute time *t* queues behind everything the servers already
+    accepted.  Host-side wave chunking then has no timing effect —
+    replaying a trace in one call or split across many calls with the
+    carried clock yields identical completion ticks
+    (tests/test_serve_queueing.py pins this invariance).
+    """
+
+    nic_free_ps: np.ndarray
+    atomic_free_ps: np.ndarray
+
+    @classmethod
+    def fresh(cls, n_ms: int) -> "ServerClock":
+        return cls(np.zeros(n_ms, np.int64), np.zeros(n_ms, np.int64))
+
+    @property
+    def now_s(self) -> float:
+        """Latest server busy frontier, in seconds."""
+        hi = max(int(self.nic_free_ps.max(initial=0)),
+                 int(self.atomic_free_ps.max(initial=0)))
+        return hi / PS_PER_S
+
+
 # --------------------------------------------------------------------------
 # shared grid + result assembly
 # --------------------------------------------------------------------------
@@ -111,24 +144,39 @@ def _empty_sim(n_lanes: int) -> dict:
     return dict(latency_s=np.zeros(n_lanes), makespan_s=0.0,
                 lane_doorbells=np.zeros(n_lanes, np.int64),
                 write_bytes=np.zeros(n_lanes),
+                lane_queue_s=np.zeros(n_lanes),
+                verb_start_s=np.zeros(0),
                 msgs=0, verbs=0, bytes=0.0, cas_msgs=0, doorbells=0)
 
 
-def _finish_sim(trace: V.VerbTrace, comp_ps: np.ndarray) -> dict:
+def _finish_sim(trace: V.VerbTrace, comp_ps: np.ndarray,
+                wait_ps: np.ndarray, start_ps: np.ndarray) -> dict:
     """Fold per-verb completion ticks into the phase's reported totals.
 
     ``lane_doorbells`` is the per-lane doorbell-ring count
     (``VerbTrace.per_lane_doorbells`` in :mod:`repro.core.verbs`) — the
     sequential posting-depth metric; for read phases every READ is its
     own ring, so there it equals the lane's remote reads.
+
+    ``lane_queue_s`` is the lane's total **queueing delay**: per-verb
+    wait for the NIC message unit plus (for CAS) the atomic unit, summed
+    over the lane's verbs.  Waiting on a dependency (``dep``/``dep2``)
+    or an ``at`` release gate is not queueing — the verb is not yet
+    posted.  ``verb_start_s`` is each verb's NIC service start, so
+    release-gate invariants (no verb starts before its op arrived) are
+    checkable per verb.
     """
     comp = comp_ps * (1.0 / PS_PER_S)
     lat = np.zeros(trace.n_lanes)
     lm = trace.lane >= 0
     np.maximum.at(lat, trace.lane[lm], comp[lm])
+    queue = np.zeros(trace.n_lanes)
+    np.add.at(queue, trace.lane[lm], wait_ps[lm] * (1.0 / PS_PER_S))
     return dict(latency_s=lat, makespan_s=float(comp.max()),
                 lane_doorbells=trace.per_lane_doorbells(),
                 write_bytes=trace.per_lane_write_bytes(),
+                lane_queue_s=queue,
+                verb_start_s=start_ps * (1.0 / PS_PER_S),
                 msgs=trace.n_verbs, verbs=trace.n_verbs,
                 bytes=trace.total_bytes,
                 cas_msgs=trace.n_cas, doorbells=trace.n_doorbells)
@@ -139,7 +187,7 @@ def _finish_sim(trace: V.VerbTrace, comp_ps: np.ndarray) -> dict:
 # --------------------------------------------------------------------------
 
 def simulate_ref(trace: V.VerbTrace, net: NetConfig, n_ms: int,
-                 onchip: bool) -> dict:
+                 onchip: bool, clock: ServerClock | None = None) -> dict:
     """Per-verb heapq replay — the specification :func:`simulate` must
     match tick-for-tick.
 
@@ -150,6 +198,9 @@ def simulate_ref(trace: V.VerbTrace, net: NetConfig, n_ms: int,
     service.  Verbs sharing a doorbell inherit the head's gates (set by
     the combine transformation), so they post together and per-MS FIFO
     order keeps in-order delivery.
+
+    With a :class:`ServerClock` the busy frontiers seed from (and write
+    back to) the carried per-MS state — the open-loop absolute timeline.
     """
     n = trace.n_verbs
     if n == 0:
@@ -173,22 +224,30 @@ def simulate_ref(trace: V.VerbTrace, net: NetConfig, n_ms: int,
     heap = [(at[i], i) for i in np.nonzero(
         (trace.dep < 0) & (trace.dep2 < 0))[0].tolist()]
     heapq.heapify(heap)
-    nic_free = [0] * n_ms
-    atomic_free = [0] * n_ms
+    nic_free = ([0] * n_ms if clock is None
+                else clock.nic_free_ps.tolist())
+    atomic_free = ([0] * n_ms if clock is None
+                   else clock.atomic_free_ps.tolist())
     comp = [0] * n
+    wait = [0] * n
+    start = [0] * n
     push, pop = heapq.heappush, heapq.heappop
     while heap:
         t, i = pop(heap)
         m = ms[i]
         s = t if t > nic_free[m] else nic_free[m]
+        start[i] = s
+        w = s - t
         d = s + svc[i]
         nic_free[m] = d
         if kind[i] == V.CAS:
             a = d if d > atomic_free[m] else atomic_free[m]
+            w += a - d
             d = a + cas_s
             atomic_free[m] = d
         d += rtt
         comp[i] = d
+        wait[i] = w
         for c in children[i]:
             npend[c] -= 1
             if not npend[c]:
@@ -200,7 +259,12 @@ def simulate_ref(trace: V.VerbTrace, net: NetConfig, n_ms: int,
                 if j >= 0 and comp[j] > r:
                     r = comp[j]
                 push(heap, (r, c))
-    return _finish_sim(trace, np.asarray(comp, np.int64))
+    if clock is not None:
+        clock.nic_free_ps[:] = nic_free
+        clock.atomic_free_ps[:] = atomic_free
+    return _finish_sim(trace, np.asarray(comp, np.int64),
+                       np.asarray(wait, np.int64),
+                       np.asarray(start, np.int64))
 
 
 # --------------------------------------------------------------------------
@@ -208,7 +272,7 @@ def simulate_ref(trace: V.VerbTrace, net: NetConfig, n_ms: int,
 # --------------------------------------------------------------------------
 
 def simulate(trace: V.VerbTrace, net: NetConfig, n_ms: int,
-             onchip: bool) -> dict:
+             onchip: bool, clock: ServerClock | None = None) -> dict:
     """Vectorized structure-of-arrays replay, exactly equivalent to
     :func:`simulate_ref`.
 
@@ -225,6 +289,12 @@ def simulate(trace: V.VerbTrace, net: NetConfig, n_ms: int,
     recurrence again on the atomic unit, and completions release the
     verbs gated on them.  All arithmetic is int64 ticks on the shared
     grid, so ordering ties resolve identically to the reference loop.
+
+    With a :class:`ServerClock` the carried busy frontiers seed the
+    recurrences and are written back afterwards (the open-loop absolute
+    timeline).  The horizon argument is unaffected: a carried frontier
+    only delays service starts, and per-MS FIFO order is decided by
+    ready times, which the frontier does not touch.
     """
     n = trace.n_verbs
     if n == 0:
@@ -245,8 +315,12 @@ def simulate(trace: V.VerbTrace, net: NetConfig, n_ms: int,
     d2 = np.where(has2, dep2, 0)
 
     comp = np.zeros(n, np.int64)
-    nic_free = np.zeros(n_ms, np.int64)
-    atomic_free = np.zeros(n_ms, np.int64)
+    wait = np.zeros(n, np.int64)
+    start = np.zeros(n, np.int64)
+    nic_free = (np.zeros(n_ms, np.int64) if clock is None
+                else clock.nic_free_ps.copy())
+    atomic_free = (np.zeros(n_ms, np.int64) if clock is None
+                   else clock.atomic_free_ps.copy())
     look = int(svc.min()) + rtt_ps       # conservative horizon increment
 
     # static frontier: verbs with no gates, consumed as a sorted cursor
@@ -297,9 +371,12 @@ def simulate(trace: V.VerbTrace, net: NetConfig, n_ms: int,
                 np.maximum(base[a:b], nic_free[m0] - (c[a] - svcS[a])))
             d[a:b] = c[a:b] + hi
             nic_free[m0] = d[b - 1]
+        startS = d - svcS                 # NIC service start per verb
+        waitS = startS - R               # NIC message-unit queueing
         cm = kind[S] == V.CAS
         if cm.any():
             cpos = np.flatnonzero(cm)
+            d_nic = d[cpos].copy()       # NIC completion before atomic pass
             ca = cas_ps * np.arange(1, cpos.size + 1, dtype=np.int64)
             base2 = d[cpos] - (ca - cas_ps)
             seg_of = np.searchsorted(starts, cpos, side="right")
@@ -313,7 +390,10 @@ def simulate(trace: V.VerbTrace, net: NetConfig, n_ms: int,
                                atomic_free[m0] - (ca[a] - cas_ps)))
                 d[cpos[a:b]] = ca[a:b] + hi
                 atomic_free[m0] = d[cpos[b - 1]]
+            waitS[cpos] += (d[cpos] - cas_ps) - d_nic   # atomic-unit wait
         comp[S] = d + rtt_ps
+        wait[S] = waitS
+        start[S] = startS
         done += S.size
         # release the verbs gated on this wave's completions
         a_, b_ = coff[S], coff[S + 1]
@@ -330,7 +410,10 @@ def simulate(trace: V.VerbTrace, net: NetConfig, n_ms: int,
                     np.where(has2[nk], comp[d2[nk]], 0)))
                 dyn_i = np.concatenate([dyn_i, nk])
                 dyn_r = np.concatenate([dyn_r, r_])
-    return _finish_sim(trace, comp)
+    if clock is not None:
+        clock.nic_free_ps[:] = nic_free
+        clock.atomic_free_ps[:] = atomic_free
+    return _finish_sim(trace, comp, wait, start)
 
 
 def transformed_write_trace(stats: dict, feat: Features, net: NetConfig,
@@ -413,7 +496,8 @@ def price_read_phase(stats: dict, feat: Features, net: NetConfig, cfg):
 
 
 def price_merged_phase(traces: list[V.VerbTrace], feat: Features,
-                       net: NetConfig, cfg):
+                       net: NetConfig, cfg,
+                       clock: ServerClock | None = None):
     """Price one cluster wave: merge per-CS traces into one timeline and
     replay it against the *shared* per-MS resources.
 
@@ -422,10 +506,12 @@ def price_merged_phase(traces: list[V.VerbTrace], feat: Features,
     merged trace itself so the caller can attribute lanes back to their
     source CS via ``merged.meta['lane_cs']``.  Cross-CS GLT serialization
     and NIC/atomic-unit queueing are emergent — see
-    :func:`repro.core.verbs.merge_traces`.
+    :func:`repro.core.verbs.merge_traces`.  ``clock`` (open-loop serving
+    plane) replays the wave on the carried absolute timeline instead of
+    a fresh one.
     """
     merged = V.merge_traces(traces)
-    sim = simulate(merged, net, cfg.n_ms, feat.onchip)
+    sim = simulate(merged, net, cfg.n_ms, feat.onchip, clock=clock)
     return sim, merged
 
 

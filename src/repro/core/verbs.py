@@ -373,6 +373,31 @@ def combine_doorbells(tr: VerbTrace) -> VerbTrace:
     return dataclasses.replace(tr, doorbell=doorbell, dep=dep, dep2=dep2)
 
 
+def shift_release(tr: VerbTrace, release_s, background_s: float = 0.0
+                  ) -> VerbTrace:
+    """Open-loop release gates: rebase a phase trace onto absolute time.
+
+    ``release_s[lane]`` is the lane's op arrival (admission) timestamp on
+    the serving plane's absolute timeline; every verb of the lane keeps
+    its *relative* ``at`` floor (the spin-CAS RTT staggering) on top of
+    it, so no verb of an op can start before the op arrived.  Background
+    verbs (``lane == -1`` maintenance traffic) shift by ``background_s``
+    — the wave's admission time.  This is a pure relabeling of *when*:
+    verb structure, payloads, deps and doorbells are untouched, which is
+    what keeps the t=0 open-loop run trace-identical to the closed-loop
+    scheduler (tests/test_serve_queueing.py).
+    """
+    if tr.n_verbs == 0:
+        return tr
+    at = np.asarray(tr.at, np.float64).copy()
+    lm = tr.lane >= 0
+    if lm.any():
+        at[lm] += np.asarray(release_s, np.float64)[tr.lane[lm]]
+    if background_s and not lm.all():
+        at[~lm] += float(background_s)
+    return dataclasses.replace(tr, at=at)
+
+
 # --------------------------------------------------------------------------
 # read-phase / maintenance emission
 # --------------------------------------------------------------------------

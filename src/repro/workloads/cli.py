@@ -54,6 +54,17 @@ def main(argv: Optional[list] = None) -> str:
                          "CSs (cluster plane only): each CS draws from "
                          "its own record shard instead of the shared "
                          "hot set")
+    ap.add_argument("--arrival", default=None,
+                    choices=("poisson", "bursty", "diurnal"),
+                    help="open-loop serving plane (DESIGN.md §12): ops "
+                         "arrive per this process at --rate instead of "
+                         "draining in lockstep rounds; requires "
+                         "--n-clients and --rate")
+    ap.add_argument("--rate", type=float, default=None, metavar="MOPS",
+                    help="offered load in Mops/s for --arrival")
+    ap.add_argument("--slo-us", type=float, default=100.0,
+                    help="sojourn SLO (us) used for slo_attainment in "
+                         "open-loop runs (default 100)")
     ap.add_argument("--seed", type=int, default=1)
     ap.add_argument("--quick", action="store_true",
                     help=f"CI-sized run ({QUICK})")
@@ -102,8 +113,24 @@ def main(argv: Optional[list] = None) -> str:
         ap.error(f"--n-clients must be positive, got {args.n_clients}")
     if args.partitioned and args.n_clients is None:
         ap.error("--partitioned requires --n-clients (cluster plane)")
+    if args.arrival is not None:
+        if args.n_clients is None:
+            ap.error("--arrival requires --n-clients (the serving plane "
+                     "feeds the cluster scheduler)")
+        if args.rate is None or args.rate <= 0:
+            ap.error("--arrival requires a positive --rate (Mops/s)")
+        spec = spec.replace(arrival=args.arrival, offered_mops=args.rate)
+    elif args.rate is not None:
+        ap.error("--rate only makes sense with --arrival")
+    if args.slo_us <= 0:
+        ap.error(f"--slo-us must be positive, got {args.slo_us}")
 
-    if args.n_clients is not None:
+    if args.arrival is not None:
+        results = engine.run_open_loop_systems(
+            spec, systems, n_clients=args.n_clients, seed=args.seed,
+            cache_bytes=args.cache_bytes, cache_levels=args.cache_levels,
+            partitioned=args.partitioned, slo_us=args.slo_us)
+    elif args.n_clients is not None:
         results = engine.run_cluster_systems(
             spec, systems, n_clients=args.n_clients, seed=args.seed,
             cache_bytes=args.cache_bytes, cache_levels=args.cache_levels,
@@ -127,6 +154,13 @@ def main(argv: Optional[list] = None) -> str:
                   f"{r.n_clients // len(r.per_cs)} threads, "
                   f"{r.rounds} rounds, stale={stale}, "
                   f"conservation={'OK' if r.conservation_ok else 'VIOLATED'}")
+        if r.arrival != "closed":
+            print(f"  open loop: {r.arrival} @ {r.offered_mops:.2f} Mops "
+                  f"offered, queue mean/p99 = {r.queue_mean_us:.2f}/"
+                  f"{r.queue_p99_us:.2f} us, service mean = "
+                  f"{r.service_mean_us:.2f} us, SLO({r.slo_us:.0f}us) "
+                  f"attainment = {100 * r.slo_attainment:.1f}%, "
+                  f"sustained = {100 * r.sustained_frac:.1f}%")
 
     path = args.json or f"BENCH_{spec.name.replace('-', '_')}.json"
     engine.write_json(path, spec, results)

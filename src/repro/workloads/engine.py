@@ -86,6 +86,17 @@ class RunResult:
     conservation_ok: bool = True  # merged-trace totals == sum of per-CS
     #                            functional trace totals (always True for
     #                            single-frontend runs — nothing is merged)
+    # Open-loop serving plane (repro.serve, DESIGN.md §12); closed-loop
+    # runs report arrival="closed" and zeros:
+    arrival: str = "closed"      # arrival process driving the run
+    offered_mops: float = 0.0    # offered load (0 for closed loop)
+    queue_mean_us: float = 0.0   # mean NIC/atomic queueing delay per op
+    queue_p50_us: float = 0.0
+    queue_p99_us: float = 0.0
+    service_mean_us: float = 0.0  # mean sojourn minus mean queueing
+    slo_us: float = 0.0          # sojourn SLO this run was judged against
+    slo_attainment: float = 0.0  # fraction of ops with sojourn <= slo_us
+    sustained_frac: float = 0.0  # achieved/offered throughput (<= 1)
 
     def to_dict(self) -> dict:
         return _pyify(dataclasses.asdict(self))
@@ -283,18 +294,7 @@ def run_cluster_workload(spec: WorkloadSpec, features: Features, *,
     done, op_counts = run_cluster(cluster, spec, partitioned=partitioned,
                                   seed=seed, keyspace=keyspace)
     delta = cluster.combined_counters()
-    per_cs = []
-    for node in cluster.nodes:
-        c = node.counters
-        t = c["cache_hits"] + c["cache_misses"] + c["cache_stale"]
-        per_cs.append(dict(
-            cs=node.cs_id, ops=c["ops"], write_ops=c["write_ops"],
-            read_ops=c["read_ops"], retried_ops=c["retried_ops"],
-            verbs=c["verbs"], doorbells=c["doorbells"],
-            leaf_splits=c["leaf_splits"], handovers=c["handovers"],
-            cache_hits=c["cache_hits"], cache_misses=c["cache_misses"],
-            cache_stale=c["cache_stale"],
-            cache_hit_rate=c["cache_hits"] / t if t else 0.0))
+    per_cs = _per_cs_rows(cluster)
     return _summarize(
         spec, delta, done, delta["sim_time_s"],
         _cat(cluster.latencies_write), _cat(cluster.latencies_read),
@@ -302,6 +302,104 @@ def run_cluster_workload(spec: WorkloadSpec, features: Features, *,
         system=system, op_counts=op_counts, n_clients=cluster.n_clients,
         rounds=delta["rounds"], per_cs=per_cs,
         conservation_ok=cluster.conservation_ok())
+
+
+def _per_cs_rows(cluster) -> list:
+    """Per-CS breakdown rows shared by the cluster + open-loop drivers."""
+    rows = []
+    for node in cluster.nodes:
+        c = node.counters
+        t = c["cache_hits"] + c["cache_misses"] + c["cache_stale"]
+        rows.append(dict(
+            cs=node.cs_id, ops=c["ops"], write_ops=c["write_ops"],
+            read_ops=c["read_ops"], retried_ops=c["retried_ops"],
+            verbs=c["verbs"], doorbells=c["doorbells"],
+            leaf_splits=c["leaf_splits"], handovers=c["handovers"],
+            cache_hits=c["cache_hits"], cache_misses=c["cache_misses"],
+            cache_stale=c["cache_stale"],
+            cache_hit_rate=c["cache_hits"] / t if t else 0.0))
+    return rows
+
+
+def run_open_loop_workload(spec: WorkloadSpec, features: Features, *,
+                           n_clients: int, cfg: TreeConfig = DEFAULT_CFG,
+                           keyspace: int = KEYSPACE,
+                           cache_bytes: int = 64 << 20,
+                           cache_levels: Optional[int] = None,
+                           partitioned: bool = False, sync_rounds: int = 4,
+                           seed: int = 1, system: str = "",
+                           slo_us: float = 100.0) -> RunResult:
+    """Run one spec open-loop through the serving plane (DESIGN.md §12).
+
+    Ops arrive per ``spec.arrival`` / ``spec.offered_mops`` instead of
+    being drained in lockstep rounds: the admission loop feeds the same
+    bucketed jitted cluster waves as arrivals drain, waves replay on one
+    absolute :class:`~repro.core.netsim.ServerClock` timeline, and every
+    op's latency is its *sojourn* (arrival → completion) with the
+    NIC/atomic queueing share reported separately
+    (``queue_*`` vs ``service_mean_us``).
+    """
+    from repro.cluster import build_cluster
+    from repro.serve.loop import run_open_loop
+    cluster = build_cluster(features, cfg, n_clients=n_clients,
+                            records=spec.load_records, keyspace=keyspace,
+                            cache_bytes=cache_bytes,
+                            cache_levels=cache_levels,
+                            sync_rounds=sync_rounds, seed=0)
+    done, op_counts, info = run_open_loop(cluster, spec, seed=seed,
+                                          keyspace=keyspace,
+                                          partitioned=partitioned)
+    delta = cluster.combined_counters()
+    lat_w = _cat(cluster.latencies_write)
+    lat_r = _cat(cluster.latencies_read)
+    lat = np.concatenate([lat_w, lat_r])
+    q = np.concatenate([_cat(cluster.queue_write),
+                        _cat(cluster.queue_read)])
+    horizon = delta["sim_time_s"]
+    achieved = done / horizon / 1e6 if horizon else 0.0
+    offered = info["offered_ops_s"] / 1e6
+    res = _summarize(
+        spec, delta, done, horizon, lat_w, lat_r,
+        _cat(cluster.doorbells_write), _cat(cluster.write_bytes),
+        system=system, op_counts=op_counts, n_clients=cluster.n_clients,
+        rounds=info["waves"], per_cs=_per_cs_rows(cluster),
+        conservation_ok=cluster.conservation_ok(),
+        arrival=spec.arrival, offered_mops=offered,
+        queue_mean_us=float(q.mean()) * 1e6 if q.size else 0.0,
+        queue_p50_us=float(np.percentile(q, 50)) * 1e6 if q.size else 0.0,
+        queue_p99_us=float(np.percentile(q, 99)) * 1e6 if q.size else 0.0,
+        service_mean_us=(float(lat.mean() - q.mean()) * 1e6
+                         if lat.size and q.size else 0.0),
+        slo_us=slo_us,
+        slo_attainment=(float((lat <= slo_us * 1e-6).mean())
+                        if lat.size else 0.0),
+        sustained_frac=(min(1.0, achieved / offered) if offered else 1.0))
+    return res
+
+
+def run_open_loop_systems(spec: WorkloadSpec,
+                          systems: Sequence[str] = ("sherman", "fg+"),
+                          cfg: TreeConfig = DEFAULT_CFG, *,
+                          n_clients: int, keyspace: int = KEYSPACE,
+                          cache_bytes: int = 64 << 20,
+                          cache_levels: Optional[int] = None,
+                          partitioned: bool = False, sync_rounds: int = 4,
+                          seed: int = 1,
+                          slo_us: float = 100.0) -> list[RunResult]:
+    """Open-loop analogue of :func:`run_cluster_systems`."""
+    out = []
+    for name in systems:
+        try:
+            feat = SYSTEMS[name.lower()]
+        except KeyError:
+            raise KeyError(f"unknown system {name!r}; "
+                           f"known: {', '.join(sorted(SYSTEMS))}") from None
+        out.append(run_open_loop_workload(
+            spec, feat, n_clients=n_clients, cfg=cfg, keyspace=keyspace,
+            cache_bytes=cache_bytes, cache_levels=cache_levels,
+            partitioned=partitioned, sync_rounds=sync_rounds, seed=seed,
+            system=name, slo_us=slo_us))
+    return out
 
 
 def run_cluster_systems(spec: WorkloadSpec,

@@ -23,6 +23,9 @@ import dataclasses
 
 OP_KINDS = ("read", "insert", "update", "delete", "scan", "rmw")
 DISTRIBUTIONS = ("zipfian", "uniform", "latest")
+#: Arrival processes for the open-loop serving plane (repro.serve);
+#: canonical here so the spec validates without importing the plane.
+ARRIVAL_KINDS = ("closed", "poisson", "bursty", "diurnal")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -43,6 +46,14 @@ class WorkloadSpec:
     ops: int = 8_192                # run-phase operation count
     batch: int = 1_024              # ops per batched wave
 
+    # -- open-loop serving plane (repro.serve; DESIGN.md §12) ----------
+    arrival: str = "closed"         # closed | poisson | bursty | diurnal
+    offered_mops: float = 0.0       # offered load (Mops/s); >0 when open
+    burst_factor: float = 8.0       # bursty: burst-state rate multiplier
+    burst_frac: float = 0.1         # bursty: fraction of time in burst
+    diurnal_period_s: float = 5e-3  # diurnal: envelope period (sim s)
+    diurnal_peak: float = 1.8       # diurnal: peak/mean rate ratio
+
     def __post_init__(self):
         total = sum(getattr(self, k) for k in OP_KINDS)
         if abs(total - 1.0) > 1e-6:
@@ -52,6 +63,29 @@ class WorkloadSpec:
             raise ValueError(
                 f"workload {self.name!r}: unknown distribution "
                 f"{self.distribution!r} (want one of {DISTRIBUTIONS})")
+        if self.arrival not in ARRIVAL_KINDS:
+            raise ValueError(
+                f"workload {self.name!r}: unknown arrival process "
+                f"{self.arrival!r} (want one of {ARRIVAL_KINDS})")
+        if self.arrival != "closed" and self.offered_mops <= 0:
+            raise ValueError(
+                f"workload {self.name!r}: open-loop arrival "
+                f"{self.arrival!r} needs offered_mops > 0")
+        if self.arrival == "bursty":
+            if not 0.0 < self.burst_frac < 1.0 or self.burst_factor <= 1.0 \
+                    or self.burst_factor * self.burst_frac >= 1.0:
+                raise ValueError(
+                    f"workload {self.name!r}: bursty arrivals need "
+                    f"0 < burst_frac < 1, burst_factor > 1 and "
+                    f"burst_factor*burst_frac < 1 (got "
+                    f"{self.burst_factor} x {self.burst_frac})")
+        if self.arrival == "diurnal":
+            if not 1.0 < self.diurnal_peak <= 2.0 or \
+                    self.diurnal_period_s <= 0:
+                raise ValueError(
+                    f"workload {self.name!r}: diurnal arrivals need "
+                    f"1 < peak <= 2 and period > 0 (got peak="
+                    f"{self.diurnal_peak}, period={self.diurnal_period_s})")
 
     def replace(self, **kw) -> "WorkloadSpec":
         return dataclasses.replace(self, **kw)

@@ -198,6 +198,47 @@ def test_write_ops_counted_once_across_retry_phases():
     assert found.all() and (got == keys).all()
 
 
+def test_release_gates_conserve_totals():
+    """Open-loop release gates (per-lane arrival floors) change *when*
+    verbs post, never what is posted: structural totals are conserved,
+    no verb starts before its op's arrival, and both replay engines stay
+    pinned verb-for-verb on the gated trace (latency and per-lane
+    queueing attribution alike)."""
+    sd = _one_write_phase()
+    tr = netsim.transformed_write_trace(sd, SHERMAN, NET, CFG)
+    rng = np.random.default_rng(5)
+    rel = np.sort(rng.uniform(0.0, 5e-5, tr.n_lanes))
+    gated = V.shift_release(tr, rel)
+    base = netsim.simulate(tr, NET, CFG.n_ms, True)
+    sim = netsim.simulate(gated, NET, CFG.n_ms, True)
+    ref = netsim.simulate_ref(gated, NET, CFG.n_ms, True)
+    for k in ("msgs", "verbs", "doorbells", "bytes", "cas_msgs"):
+        assert sim[k] == base[k], k
+    lm = gated.lane >= 0
+    assert (sim["verb_start_s"][lm] >= rel[gated.lane[lm]] - 1e-12).all()
+    assert np.array_equal(sim["latency_s"], ref["latency_s"])
+    assert np.array_equal(sim["lane_queue_s"], ref["lane_queue_s"])
+    # an op's completion can never precede its own release
+    assert (sim["latency_s"] >= rel - 1e-12).all()
+
+
+def test_single_verb_latency_decomposition():
+    """For a single-verb op the reported (absolute) completion decomposes
+    exactly: arrival + queueing delay + service + RTT — the accounting
+    identity the serving plane's queue/service split relies on."""
+    from repro.serve import poisson_arrivals, station_trace
+    arr = poisson_arrivals(4e5, 512, seed=2) / netsim.PS_PER_S
+    tr = station_trace(arr, 12_500, n_ms=2)
+    sim = netsim.simulate(tr, NET, 2, True)
+    svc = np.rint(max(1.0 / NET.nic_iops_small, 12_500 / NET.nic_bw_Bps)
+                  * netsim.PS_PER_S) / netsim.PS_PER_S
+    rtt = round(NET.rtt_s * netsim.PS_PER_S) / netsim.PS_PER_S
+    want = arr + sim["lane_queue_s"] + svc + rtt
+    assert np.allclose(sim["latency_s"], want, rtol=0, atol=1e-12)
+    assert (sim["verb_start_s"] >= arr - 1e-12).all()
+    assert (sim["lane_queue_s"] >= 0).all()
+
+
 def test_run_result_reports_verb_plane(tmp_path):
     """RunResult carries the verb/doorbell/combine-savings fields and they
     serialize."""

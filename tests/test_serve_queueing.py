@@ -1,0 +1,389 @@
+"""The open-loop serving plane, validated against queueing theory.
+
+Three layers of evidence that the event simulator is a faithful queue:
+
+* **Analytic** — the single-station harness is an M/G/1 queue by
+  construction, so its measured mean queueing delay must match the
+  Pollaczek–Khinchine formula (with empirical service moments, which
+  makes the check exact for both deterministic and exponential
+  payloads), and must diverge as utilization approaches 1.
+* **Structural** — wave formation is timing-neutral (chunked dispatch
+  against the carried :class:`ServerClock` is bit-identical to one-shot
+  replay), both replay engines agree verb-for-verb with a carried clock,
+  and the sojourn identity ``sojourn = wait + service + RTT`` holds to
+  the picosecond grid.
+* **Differential** — with every arrival at t=0 the open-loop cluster
+  serving path reproduces the closed-loop scheduler *tick for tick*:
+  same trace digests, same counters, same per-node totals.
+
+Arrival-generator properties (seeded determinism, Poisson mean gap,
+bursty CV dominance, monotone int64 grid, overflow guard) run as plain
+deterministic checks; richer randomized versions run when Hypothesis is
+installed and skip cleanly when it is not (no new dependencies).
+"""
+import numpy as np
+import pytest
+
+from repro.core import TreeConfig, netsim
+from repro.core.netsim import PS_PER_S, SHERMAN, NetConfig
+from repro.serve import (bursty_arrivals, diurnal_arrivals, make_arrivals,
+                         poisson_arrivals, simulate_station)
+from repro.workloads.spec import get_preset
+
+#: Fat RTT relative to service: widens the wavefront engine's horizon
+#: (fewer host waves => fast tests) without touching queueing — waits
+#: are set by NIC occupancy, not by the completion round trip.
+NET = NetConfig(rtt_s=4e-5)
+SVC_BYTES = 12_500            # exactly 1 us of NIC occupancy under NET
+SVC_S = max(1.0 / NET.nic_iops_small, SVC_BYTES / NET.nic_bw_Bps)
+N_PK = 20_000                 # arrivals per analytic validation run
+
+
+def _pk_wait(arr_ps: np.ndarray, service_s: np.ndarray) -> float:
+    """Pollaczek–Khinchine mean queueing delay Wq = λE[S²] / 2(1−ρ),
+    with λ and the service moments taken *empirically* from the realized
+    run — exact for any M/G/1, no distributional assumption."""
+    lam = (arr_ps.size - 1) / ((arr_ps[-1] - arr_ps[0]) / PS_PER_S)
+    rho = lam * service_s.mean()
+    assert rho < 1.0
+    return lam * np.mean(service_s ** 2) / (2.0 * (1.0 - rho))
+
+
+# --------------------------------------------------------------------------
+# analytic: Pollaczek–Khinchine
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("rho", [0.2, 0.5, 0.8])
+def test_md1_pollaczek_khinchine(rho):
+    """Deterministic payload => M/D/1: the simulated mean queueing delay
+    matches the P-K closed form within 15% at every utilization."""
+    arr = poisson_arrivals(rho / SVC_S, N_PK, seed=3)
+    sim = simulate_station(arr / PS_PER_S, SVC_BYTES, NET, n_ms=1)
+    wq = _pk_wait(arr, sim["service_s"])
+    assert sim["wait_s"].mean() == pytest.approx(wq, rel=0.15)
+
+
+@pytest.mark.parametrize("rho", [0.2, 0.5, 0.8])
+def test_mg1_exponential_pollaczek_khinchine(rho):
+    """Exponential-ish payloads (the M/M/1 shape, floored by the per-verb
+    IOPS cost): empirical-moment P-K still pins the simulator — the
+    queue does not care about the service distribution beyond its first
+    two moments, and neither does the formula."""
+    rng = np.random.default_rng(11)
+    nbytes = np.maximum(1, rng.exponential(SVC_BYTES, N_PK)).astype(np.int64)
+    mean_svc = np.maximum(1.0 / NET.nic_iops_small,
+                          nbytes / NET.nic_bw_Bps).mean()
+    arr = poisson_arrivals(rho / mean_svc, N_PK, seed=5)
+    sim = simulate_station(arr / PS_PER_S, nbytes, NET, n_ms=1)
+    wq = _pk_wait(arr, sim["service_s"])
+    assert sim["wait_s"].mean() == pytest.approx(wq, rel=0.15)
+    # M/M/1-vs-M/D/1 shape: variable service queues strictly worse than
+    # deterministic service at equal utilization (E[S^2] dominance)
+    det = simulate_station(
+        poisson_arrivals(rho / SVC_S, N_PK, seed=5) / PS_PER_S,
+        SVC_BYTES, NET, n_ms=1)
+    assert sim["wait_s"].mean() > det["wait_s"].mean()
+
+
+def test_queueing_diverges_near_saturation():
+    """Wq must blow up as rho -> 1 (the hockey stick): the simulated mean
+    wait at rho=0.95 is several times the rho=0.8 wait, and both exceed
+    the rho=0.5 wait."""
+    waits = {}
+    for rho in (0.5, 0.8, 0.95):
+        arr = poisson_arrivals(rho / SVC_S, N_PK, seed=9)
+        sim = simulate_station(arr / PS_PER_S, SVC_BYTES, NET, n_ms=1)
+        waits[rho] = sim["wait_s"].mean()
+    assert waits[0.8] > 2.0 * waits[0.5]
+    assert waits[0.95] > 3.0 * waits[0.8]
+
+
+# --------------------------------------------------------------------------
+# structural: chunking invariance, engine agreement, sojourn identity
+# --------------------------------------------------------------------------
+
+def test_wave_chunking_is_timing_neutral():
+    """Dispatching the stream in host waves against the carried
+    ServerClock yields bit-identical completions and waits to one-shot
+    replay — wave formation is an execution-granularity knob only."""
+    arr = poisson_arrivals(0.7 / SVC_S, 5_000, seed=7) / PS_PER_S
+    one = simulate_station(arr, SVC_BYTES, NET, n_ms=2)
+    for chunk in (1_024, 333, 1):
+        waved = simulate_station(arr, SVC_BYTES, NET, n_ms=2, chunk=chunk)
+        assert np.array_equal(one["comp_s"], waved["comp_s"]), chunk
+        assert np.array_equal(one["wait_s"], waved["wait_s"]), chunk
+
+
+def test_replay_engines_agree_with_carried_clock():
+    """The vectorized wavefront engine and the heapq reference are pinned
+    verb-for-verb on release-gated traces with a carried clock."""
+    arr = poisson_arrivals(0.8 / SVC_S, 2_000, seed=13) / PS_PER_S
+    rng = np.random.default_rng(13)
+    nbytes = np.maximum(1, rng.exponential(SVC_BYTES, 2_000)).astype(np.int64)
+    wf = simulate_station(arr, nbytes, NET, n_ms=2, chunk=512)
+    ref = simulate_station(arr, nbytes, NET, n_ms=2, chunk=512, engine="ref")
+    assert np.array_equal(wf["comp_s"], ref["comp_s"])
+    assert np.array_equal(wf["wait_s"], ref["wait_s"])
+
+
+def test_sojourn_identity():
+    """Per op: sojourn == queueing wait + service + RTT, on the ps grid."""
+    arr = poisson_arrivals(0.6 / SVC_S, 3_000, seed=17) / PS_PER_S
+    sim = simulate_station(arr, SVC_BYTES, NET, n_ms=1)
+    lhs = sim["sojourn_s"]
+    rhs = sim["wait_s"] + sim["service_s"] + sim["rtt_s"]
+    assert np.allclose(lhs, rhs, rtol=0, atol=1e-12)
+    assert (sim["wait_s"] >= 0).all()
+
+
+# --------------------------------------------------------------------------
+# arrival-generator properties (deterministic; Hypothesis versions below)
+# --------------------------------------------------------------------------
+
+GEN_CASES = [
+    ("poisson", {}),
+    ("bursty", {}),
+    ("diurnal", {}),
+]
+
+
+@pytest.mark.parametrize("kind,kw", GEN_CASES)
+def test_generators_deterministic_monotone_int64(kind, kw):
+    """Same seed => identical stream; different seed => different stream;
+    timestamps are non-decreasing int64 on the ps grid."""
+    a = make_arrivals(kind, 2e6, 4_096, seed=42, **kw)
+    b = make_arrivals(kind, 2e6, 4_096, seed=42, **kw)
+    c = make_arrivals(kind, 2e6, 4_096, seed=43, **kw)
+    assert a.dtype == np.int64 and a.size == 4_096
+    assert np.array_equal(a, b)
+    assert not np.array_equal(a, c)
+    assert (np.diff(a) >= 0).all()
+
+
+@pytest.mark.parametrize("kind,kw", GEN_CASES)
+def test_generators_hit_requested_mean_rate(kind, kw):
+    """Mean interarrival gap ~= 1/rate for every process (all three
+    normalize to the requested mean rate)."""
+    rate = 1e6
+    arr = make_arrivals(kind, rate, 60_000, seed=1, **kw)
+    mean_gap_s = float(np.diff(arr).mean()) / PS_PER_S
+    assert mean_gap_s == pytest.approx(1.0 / rate, rel=0.05)
+
+
+def test_bursty_cv_exceeds_poisson():
+    """Interarrival coefficient of variation: the MMPP must be strictly
+    burstier than Poisson (CV > 1) — the defining property."""
+    def cv(arr):
+        gaps = np.diff(arr).astype(np.float64)
+        return gaps.std() / gaps.mean()
+    p = poisson_arrivals(1e6, 60_000, seed=2)
+    b = bursty_arrivals(1e6, 60_000, seed=2)
+    assert cv(b) > 1.15 * cv(p)
+    assert cv(p) == pytest.approx(1.0, rel=0.05)   # Poisson: CV = 1
+
+
+def test_paper_scale_rates_do_not_overflow():
+    """Paper-scale offered loads (tens of Mops over millions of ops) stay
+    far inside the int64 ps grid; an absurd horizon raises instead of
+    silently wrapping."""
+    arr = poisson_arrivals(50e6, 200_000, seed=0)
+    assert arr[-1] < np.int64(1) << 62
+    assert (np.diff(arr) >= 0).all()
+    with pytest.raises(OverflowError):
+        poisson_arrivals(1e-6, 8, seed=0)   # ~ one op per 11.5 days
+
+
+def test_generator_argument_validation():
+    with pytest.raises(ValueError):
+        poisson_arrivals(0.0, 10)
+    with pytest.raises(ValueError):
+        bursty_arrivals(1e6, 10, burst_factor=12.0, burst_frac=0.2)
+    with pytest.raises(ValueError):
+        diurnal_arrivals(1e6, 10, peak=2.5)
+    with pytest.raises(ValueError):
+        make_arrivals("sawtooth", 1e6, 10)
+
+
+# --------------------------------------------------------------------------
+# Hypothesis property tests (skip cleanly when hypothesis is absent)
+# --------------------------------------------------------------------------
+
+def _hyp():
+    hyp = pytest.importorskip("hypothesis")
+    from hypothesis import strategies as st
+    return hyp, st
+
+
+def test_hypothesis_generator_properties():
+    """Randomized generator properties over (kind, rate, n, seed): seeded
+    determinism, monotone non-decreasing int64 grid, and mean-rate
+    normalization — the same invariants as the deterministic checks, but
+    over a sampled parameter space."""
+    hyp, st = _hyp()
+
+    @hyp.settings(max_examples=25, deadline=None)
+    @hyp.given(kind=st.sampled_from(("poisson", "bursty", "diurnal")),
+               rate=st.floats(1e4, 5e7), n=st.integers(64, 4_096),
+               seed=st.integers(0, 2 ** 31))
+    def check(kind, rate, n, seed):
+        a = make_arrivals(kind, rate, n, seed=seed)
+        b = make_arrivals(kind, rate, n, seed=seed)
+        assert a.dtype == np.int64
+        assert np.array_equal(a, b)
+        assert (np.diff(a) >= 0).all()
+        assert a[-1] < np.int64(1) << 62
+
+    check()
+
+
+def test_hypothesis_poisson_mean_gap():
+    """E[gap] -> 1/λ for Poisson at any sampled rate (LLN tolerance)."""
+    hyp, st = _hyp()
+
+    @hyp.settings(max_examples=10, deadline=None)
+    @hyp.given(rate=st.floats(1e5, 2e7), seed=st.integers(0, 2 ** 16))
+    def check(rate, seed):
+        arr = poisson_arrivals(rate, 30_000, seed=seed)
+        mean_gap = float(np.diff(arr).mean()) / PS_PER_S
+        assert mean_gap == pytest.approx(1.0 / rate, rel=0.10)
+
+    check()
+
+
+def test_hypothesis_bursty_cv_dominance():
+    """Bursty CV strictly exceeds Poisson's for any valid MMPP shape."""
+    hyp, st = _hyp()
+
+    @hyp.settings(max_examples=10, deadline=None)
+    @hyp.given(factor=st.floats(3.0, 9.0), frac=st.floats(0.05, 0.1),
+               seed=st.integers(0, 2 ** 16))
+    def check(factor, frac, seed):
+        def cv(arr):
+            g = np.diff(arr).astype(np.float64)
+            return g.std() / g.mean()
+        b = bursty_arrivals(1e6, 40_000, seed=seed, burst_factor=factor,
+                            burst_frac=frac)
+        p = poisson_arrivals(1e6, 40_000, seed=seed)
+        assert cv(b) > cv(p)
+
+    check()
+
+
+# --------------------------------------------------------------------------
+# differential: t=0 open loop == closed loop, tick for tick
+# --------------------------------------------------------------------------
+
+CFG_CL = TreeConfig(n_ms=2, nodes_per_ms=1024, fanout=8, n_locks_per_ms=512,
+                    max_height=6, n_cs=4)
+TINY = dict(load_records=2_000, ops=256, batch=128)
+
+
+def _mixed_spec():
+    """Every op kind at once — exercises the full materialization order
+    (scan, read, rmw, update, delete, insert) and insert-driven
+    record-space growth."""
+    from repro.workloads.spec import WorkloadSpec
+    return WorkloadSpec(name="mixed", read=0.3, insert=0.2, update=0.2,
+                        delete=0.1, scan=0.1, rmw=0.1, **TINY)
+
+
+@pytest.mark.parametrize("spec_fn", [lambda: get_preset("ycsb-a", **TINY),
+                                     _mixed_spec],
+                         ids=["ycsb-a", "all-kinds"])
+def test_open_loop_t0_reproduces_closed_loop(spec_fn):
+    """With every arrival stamped at t=0, the serving plane must execute
+    the closed-loop scheduler's exact program: identical op streams,
+    identical merged-trace digests in identical order, identical
+    counters (except the deliberately redefined ``sim_time_s``),
+    identical per-node totals and doorbell samples."""
+    from repro.cluster import build_cluster, run_cluster
+    from repro.serve import run_open_loop
+    spec = spec_fn()
+
+    closed = build_cluster(SHERMAN, CFG_CL, n_clients=8,
+                           records=TINY["load_records"], seed=0)
+    closed.record_traces()
+    done_c, ops_c = run_cluster(closed, spec, seed=1, keyspace=1 << 20)
+
+    served = build_cluster(SHERMAN, CFG_CL, n_clients=8,
+                           records=TINY["load_records"], seed=0)
+    served.record_traces()
+    done_o, ops_o, info = run_open_loop(served, spec, seed=1,
+                                        keyspace=1 << 20)
+
+    assert done_o == done_c and ops_o == ops_c
+    assert served.trace_log == closed.trace_log      # tick-for-tick
+    kc = {k: v for k, v in closed.combined_counters().items()
+          if k != "sim_time_s"}
+    ko = {k: v for k, v in served.combined_counters().items()
+          if k != "sim_time_s"}
+    assert ko == kc
+    assert served.node_totals() == closed.node_totals()
+    assert np.array_equal(np.concatenate(served.doorbells_write),
+                          np.concatenate(closed.doorbells_write))
+    assert info["last_arrival_s"] == 0.0
+    # the open horizon is an absolute clock, not a sum of makespans —
+    # overlapping wave tails make it at most the closed-loop sum
+    assert 0 < served.counters["sim_time_s"] <= closed.counters["sim_time_s"]
+
+
+def test_open_loop_poisson_end_to_end():
+    """RunResult sanity on a real Poisson run: queueing is reported
+    separately from service, the sojourn exceeds its parts, attainment
+    and sustained fractions are proper fractions, and offered load is
+    echoed back."""
+    from repro.workloads.engine import (run_cluster_workload,
+                                        run_open_loop_workload)
+    base = get_preset("write-intensive", **TINY)
+    cal = run_cluster_workload(base, SHERMAN, n_clients=8, cfg=CFG_CL,
+                               seed=1, system="sherman")
+    rate = 0.6 * cal.mops
+    spec = base.replace(arrival="poisson", offered_mops=rate)
+    r = run_open_loop_workload(spec, SHERMAN, n_clients=8, cfg=CFG_CL,
+                               seed=1, system="sherman",
+                               slo_us=4 * cal.p99_us)
+    assert r.arrival == "poisson"
+    assert r.offered_mops == pytest.approx(rate)
+    assert r.n_ops >= base.ops and r.mops > 0
+    assert r.queue_mean_us >= 0 and r.service_mean_us > 0
+    assert r.p50_us > r.queue_p50_us          # sojourn > queueing share
+    assert 0 < r.slo_attainment <= 1
+    assert 0 < r.sustained_frac <= 1
+    assert r.conservation_ok
+    import json
+    json.dumps(r.to_dict())
+
+
+def test_overload_degrades_gracefully():
+    """Past the knee the serving plane must not report a sustained run:
+    a heavily overloaded offered rate yields sustained_frac < 1 and more
+    queueing than a lightly loaded run."""
+    from repro.workloads.engine import (run_cluster_workload,
+                                       run_open_loop_workload)
+    base = get_preset("write-intensive", **TINY)
+    cal = run_cluster_workload(base, SHERMAN, n_clients=8, cfg=CFG_CL,
+                               seed=1, system="sherman")
+    light = run_open_loop_workload(
+        base.replace(arrival="poisson", offered_mops=0.3 * cal.mops),
+        SHERMAN, n_clients=8, cfg=CFG_CL, seed=1, system="sherman")
+    heavy = run_open_loop_workload(
+        base.replace(arrival="poisson", offered_mops=4.0 * cal.mops),
+        SHERMAN, n_clients=8, cfg=CFG_CL, seed=1, system="sherman")
+    assert heavy.sustained_frac < light.sustained_frac
+    assert heavy.sustained_frac < 1.0
+    assert heavy.queue_mean_us > light.queue_mean_us
+
+
+def test_spec_validates_open_loop_fields():
+    base = get_preset("ycsb-a", **TINY)
+    with pytest.raises(ValueError):
+        base.replace(arrival="poisson")            # no offered rate
+    with pytest.raises(ValueError):
+        base.replace(arrival="sawtooth", offered_mops=1.0)
+    with pytest.raises(ValueError):
+        base.replace(arrival="bursty", offered_mops=1.0,
+                     burst_factor=20.0, burst_frac=0.2)
+    with pytest.raises(ValueError):
+        base.replace(arrival="diurnal", offered_mops=1.0, diurnal_peak=3.0)
+    ok = base.replace(arrival="poisson", offered_mops=1.5)
+    assert ok.offered_mops == 1.5

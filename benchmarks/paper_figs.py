@@ -404,3 +404,47 @@ def fig16_hocl(n_locks=1_024, n_threads=1_024):
                             float(np.percentile(lat, 50)) * 1e6,
                             f"mops={mops:.2f};x={mops / base:.2f}"))
     return rows
+
+
+def chaos_sweep_bench(records=6_000, n_ops=4_096, n_clients=16,
+                      json_path="BENCH_chaos.json"):
+    """Chaos sweep through the fault-injection plane (DESIGN.md §13):
+    per system, a calibrated fault-free run then the standard five-event
+    schedule (MS crash with memory loss, CS leave/join, hot-key storm
+    in/out), reporting degraded throughput, SLO violations in the fault
+    window and time-to-recover, with the differential-oracle and
+    conservation audits inline.
+
+    Writes ``BENCH_chaos.json`` — the recovery acceptance artifact
+    scripts/ci.sh gates on (finite TTR and positive degraded throughput
+    for every fault, both systems, oracle + conservation green).
+    """
+    from repro.chaos import chaos_sweep
+    payload = chaos_sweep(records=records, ops=n_ops, n_clients=n_clients,
+                          out=json_path)
+    rows = []
+    print(f"\n== Chaos sweep ({payload['preset']}, {n_clients} clients, "
+          f"{len(payload['schedules'][payload['results'][0]['system']])} "
+          f"faults) ==")
+    print(f"{'system':8s} {'fault':10s} {'t_fault':>9s} {'ttr_ms':>8s} "
+          f"{'degMops':>8s} {'slo%':>6s}")
+    for r in payload["results"]:
+        flags = (f"oracle={'OK' if r['oracle_ok'] else 'FAIL'} "
+                 f"conserv={'OK' if r['conservation_ok'] else 'FAIL'} "
+                 f"glt={'clean' if r['glt_clean'] else 'DIRTY'}")
+        for f in r["faults"]:
+            ttr = f["ttr_s"]
+            print(f"{r['system']:8s} {f['kind']:10s} "
+                  f"{f['t_fault_s'] * 1e3:9.3f} "
+                  f"{(ttr or 0) * 1e3:8.3f} "
+                  f"{f['degraded_mops'] or 0:8.3f} "
+                  f"{100 * (f['slo_violation_frac'] or 0):6.1f}")
+            rows.append(csv_row(
+                f"chaos/{r['system']}/{f['kind']}",
+                (ttr or 0) * 1e6,
+                f"degraded_mops={f['degraded_mops'] or 0:.4f};"
+                f"baseline_mops={r['baseline_mops']:.4f}"))
+        print(f"  {r['system']}: baseline {r['baseline_mops']:.3f} Mops, "
+              f"{flags}")
+    print(f"wrote {json_path}")
+    return rows

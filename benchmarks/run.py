@@ -18,7 +18,7 @@ def main(argv=None) -> None:
     ap.add_argument("--only", default="",
                     help="comma list: table1,fig10,fig11,fig12,fig13,"
                          "fig14,fig15,fig16,cache,ablation,scaling,"
-                         "throughput,load")
+                         "throughput,load,chaos")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write rows to PATH (default "
                          "BENCH_paper_figs.json with --json '')")
@@ -72,6 +72,13 @@ def main(argv=None) -> None:
             n_ops=1_024 if args.quick else 8_192,
             records=4_000 if args.quick else 20_000,
             n_clients=16)
+    if want("chaos"):
+        # fault-injection plane; always writes BENCH_chaos.json (the
+        # recovery acceptance artifact), independent of --json
+        rows += F.chaos_sweep_bench(
+            records=4_000 if args.quick else 8_000,
+            n_ops=2_048 if args.quick else 8_192,
+            n_clients=8 if args.quick else 16)
     if want("throughput"):
         # harness-performance sweep; always writes BENCH_throughput.json
         # (wall-clock sim-ops/s + XLA compile counts — the PR 5 gate)

@@ -148,6 +148,42 @@ print("load OK:",
       f"| {len(rates)} rates, slo={d['slo_us']:.1f}us")
 EOF
 
+echo "== chaos sweep (fault injection, writes BENCH_chaos.json) =="
+python benchmarks/run.py --quick --only chaos
+python - <<'EOF'
+import json, math
+
+d = json.load(open("BENCH_chaos.json"))
+assert d["kind"] == "chaos"
+systems = {r["system"] for r in d["results"]}
+assert systems == {"sherman", "fg+"}, systems
+for r in d["results"]:
+    # the differential harness must hold under the full schedule
+    assert r["oracle_ok"], (r["system"], "differential oracle broken")
+    assert r["conservation_ok"], (r["system"], "conservation across crash")
+    assert r["glt_clean"], (r["system"], "locks leaked after recovery")
+    assert r["unfired_faults"] == 0, (r["system"], r["unfired_faults"])
+    assert math.isfinite(r["baseline_mops"]) and r["baseline_mops"] > 0
+    assert math.isfinite(r["slo_us"]) and r["slo_us"] > 0
+    kinds = {f["kind"] for f in r["faults"]}
+    assert {"ms_crash", "cs_leave", "cs_join", "skew_shift"} <= kinds, kinds
+    for f in r["faults"]:
+        # recovery gate: every fault recovers in finite time with
+        # positive throughput inside the degraded window
+        assert f["ttr_s"] is not None and math.isfinite(f["ttr_s"]) \
+            and f["ttr_s"] >= 0, (r["system"], f["kind"], f["ttr_s"])
+        assert f["degraded_mops"] is not None \
+            and math.isfinite(f["degraded_mops"]) \
+            and f["degraded_mops"] > 0, (r["system"], f["kind"])
+        assert 0 <= f["slo_violation_frac"] <= 1, (r["system"], f["kind"])
+crash = {r["system"]: [f for f in r["faults"] if f["kind"] == "ms_crash"][0]
+         for r in d["results"]}
+print("chaos OK:",
+      " ".join(f"{s}: crash ttr={c['ttr_s'] * 1e3:.2f}ms "
+               f"deg={c['degraded_mops']:.3f}Mops"
+               for s, c in sorted(crash.items())))
+EOF
+
 echo "== open-loop CLI smoke (poisson arrivals) =="
 python -m repro.workloads --preset write-intensive --quick \
     --records 4000 --ops 256 --batch 128 --systems sherman \

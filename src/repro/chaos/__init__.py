@@ -1,0 +1,20 @@
+"""Chaos plane: fault injection, crash recovery, differential testing.
+
+Faults are declared on the workload spec (``WorkloadSpec.faults``,
+:class:`repro.workloads.spec.FaultEvent`) and executed by
+:class:`repro.chaos.runner.ChaosRunner` on the simulated picosecond
+timeline; :mod:`repro.chaos.faults` holds the recovery mechanisms and
+the differential-harness ground truth; :mod:`repro.chaos.bench` writes
+``BENCH_chaos.json`` (DESIGN.md §13).
+"""
+from repro.chaos.faults import (abandon_repairs, oracle_replay,
+                                recovery_trace, requeue_repairs,
+                                schedule_for_horizon, tree_contents)
+from repro.chaos.runner import ChaosRunner
+from repro.chaos.bench import chaos_sweep
+
+__all__ = [
+    "ChaosRunner", "abandon_repairs", "chaos_sweep", "oracle_replay",
+    "recovery_trace", "requeue_repairs", "schedule_for_horizon",
+    "tree_contents",
+]

@@ -3,8 +3,13 @@
 Every leaf is saved as a raw ``.npy`` with a JSON manifest describing the
 pytree structure; the step directory is written to a temp name and renamed
 (atomic on POSIX) so a crash mid-save never corrupts the latest checkpoint.
-On a real cluster this sits behind Orbax/tensorstore with per-shard writes;
-the manager's interface (save / restore_latest / gc) is the same.
+On restore every leaf is validated against the manifest's recorded dtype
+and shape *before* it is accepted — a truncated, stale, or foreign ``.npy``
+fails loudly instead of loading silently (the chaos plane's recovery path
+depends on this; see tests/test_checkpoint_train.py's corruption-injection
+cases).  On a real cluster this sits behind Orbax/tensorstore with
+per-shard writes; the manager's interface (save / restore_latest / gc) is
+the same.
 """
 from __future__ import annotations
 
@@ -17,6 +22,7 @@ import jax
 import numpy as np
 
 _MANIFEST = "manifest.json"
+_EXTRA = "extra.json"
 
 
 def _flatten_with_names(tree: Any):
@@ -32,7 +38,11 @@ class CheckpointManager:
         os.makedirs(directory, exist_ok=True)
 
     # -- save -------------------------------------------------------------
-    def save(self, tree: Any, step: int) -> str:
+    def save(self, tree: Any, step: int,
+             extra: Optional[dict] = None) -> str:
+        """Atomically publish ``tree``'s leaves plus an optional
+        JSON-serializable ``extra`` side record (host-side scalars — RNG
+        states, counters — that ride along with the array leaves)."""
         names, leaves, _ = _flatten_with_names(tree)
         tmp = os.path.join(self.dir, f".tmp_step_{step:08d}")
         final = os.path.join(self.dir, f"step_{step:08d}")
@@ -47,6 +57,9 @@ class CheckpointManager:
                                         "shape": list(arr.shape)}
         with open(os.path.join(tmp, _MANIFEST), "w") as f:
             json.dump(manifest, f)
+        if extra is not None:
+            with open(os.path.join(tmp, _EXTRA), "w") as f:
+                json.dump(extra, f)
         if os.path.exists(final):
             shutil.rmtree(final)
         os.rename(tmp, final)            # atomic publish
@@ -62,18 +75,67 @@ class CheckpointManager:
                 out.append(int(d.split("_")[1]))
         return sorted(out)
 
+    def _manifest(self, step: int) -> dict:
+        path = os.path.join(self.dir, f"step_{step:08d}", _MANIFEST)
+        with open(path) as f:
+            return json.load(f)
+
+    def _load_leaf(self, step: int, name: str, entry: dict) -> np.ndarray:
+        """Load one ``.npy`` and validate it against its manifest entry.
+
+        The manifest is the ground truth written at save time; a leaf
+        whose on-disk dtype/shape disagrees (truncated write, stale file
+        from an older run, bit-rot) must never be accepted silently.
+        """
+        path = os.path.join(self.dir, f"step_{step:08d}", name + ".npy")
+        try:
+            arr = np.load(path)
+        except Exception as e:            # truncated/corrupt npy header
+            raise ValueError(
+                f"checkpoint leaf {name} at step {step} is unreadable "
+                f"({e})") from e
+        if str(arr.dtype) != entry["dtype"]:
+            raise ValueError(
+                f"checkpoint leaf {name} dtype {arr.dtype} != manifest "
+                f"{entry['dtype']} (stale or corrupt leaf)")
+        if list(arr.shape) != list(entry["shape"]):
+            raise ValueError(
+                f"checkpoint leaf {name} shape {list(arr.shape)} != "
+                f"manifest {entry['shape']} (stale or corrupt leaf)")
+        return arr
+
     def restore(self, template: Any, step: int):
-        path = os.path.join(self.dir, f"step_{step:08d}")
+        manifest = self._manifest(step)
         names, leaves, treedef = _flatten_with_names(template)
+        if set(names) != set(manifest["leaves"]):
+            raise ValueError(
+                f"checkpoint step {step} has {len(manifest['leaves'])} "
+                f"leaves, template has {len(names)}")
         loaded = []
         for name, leaf in zip(names, leaves):
-            arr = np.load(os.path.join(path, name + ".npy"))
+            arr = self._load_leaf(step, name, manifest["leaves"][name])
             want = tuple(np.shape(leaf))
             if tuple(arr.shape) != want:
                 raise ValueError(
                     f"checkpoint leaf {name} shape {arr.shape} != {want}")
             loaded.append(arr)
         return jax.tree_util.tree_unflatten(treedef, loaded)
+
+    def restore_raw(self, step: int) -> dict[str, np.ndarray]:
+        """Load every leaf of a step by manifest name (validated), without
+        needing a structural template — callers that saved a flat dict
+        reassemble it themselves (the chaos plane's run snapshots)."""
+        manifest = self._manifest(step)
+        return {name: self._load_leaf(step, name, entry)
+                for name, entry in sorted(manifest["leaves"].items())}
+
+    def restore_extra(self, step: int) -> Optional[dict]:
+        """The JSON side record saved alongside ``step`` (None if absent)."""
+        path = os.path.join(self.dir, f"step_{step:08d}", _EXTRA)
+        if not os.path.exists(path):
+            return None
+        with open(path) as f:
+            return json.load(f)
 
     def restore_latest(self, template: Any
                        ) -> Optional[tuple[Any, int]]:

@@ -25,8 +25,8 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.workloads.keygen import draw_keys, latest_ranks, scramble, \
-    zipf_ranks
+from repro.workloads.keygen import draw_keys, hotspot_ranks, latest_ranks, \
+    scramble, zipf_ranks
 from repro.workloads.spec import WorkloadSpec
 
 
@@ -58,12 +58,16 @@ class ClusterStreams:
         if not self.partitioned:
             return draw_keys(rng, n, distribution=spec.distribution,
                              theta=spec.theta, nspace=self.n_records,
-                             keyspace=self.keyspace).astype(np.int32)
+                             keyspace=self.keyspace, hot_frac=spec.hot_frac,
+                             hot_n=spec.hot_n).astype(np.int32)
         nspace = self._shard_len[cs]
         if spec.distribution == "uniform":
             ranks = rng.integers(0, nspace, size=n).astype(np.int64)
         elif spec.distribution == "latest":
             ranks = latest_ranks(rng, n, nspace, spec.theta)
+        elif spec.distribution == "hotspot":
+            ranks = hotspot_ranks(rng, n, nspace, spec.hot_frac,
+                                  spec.hot_n)
         else:
             ranks = zipf_ranks(rng, n, nspace, spec.theta)
         return scramble(self._shard_lo[cs] + ranks,
@@ -79,3 +83,35 @@ class ClusterStreams:
         if not self.partitioned:
             self.n_records = max(self.n_records, int(ranks[-1]) + 1)
         return scramble(ranks, self.keyspace).astype(np.int32)
+
+    # -- chaos plane: mid-run skew shifts + snapshot -----------------------
+    def shift_skew(self, **kw) -> None:
+        """Retarget the draw distribution mid-run (the chaos plane's
+        skew-shift / hot-key-storm faults).  Only the key *distribution*
+        moves; op mix, RNG states and insert cursors are untouched, so
+        the op stream stays deterministic across the shift."""
+        self.spec = self.spec.replace(**kw)
+
+    def export_state(self) -> dict:
+        """JSON-serializable snapshot of the streams' mutable state —
+        per-CS RNG states, insert cursors and the (possibly shifted)
+        draw-distribution parameters."""
+        return dict(
+            rng_states=[rng.bit_generator.state for rng in self.rngs],
+            inserted=list(self._inserted),
+            n_records=self.n_records,
+            distribution=self.spec.distribution,
+            theta=self.spec.theta,
+            hot_frac=self.spec.hot_frac,
+            hot_n=self.spec.hot_n,
+        )
+
+    def import_state(self, st: dict) -> None:
+        """Restore a snapshot taken by :meth:`export_state`."""
+        for rng, s in zip(self.rngs, st["rng_states"]):
+            rng.bit_generator.state = s
+        self._inserted = [int(x) for x in st["inserted"]]
+        self.n_records = int(st["n_records"])
+        self.spec = self.spec.replace(
+            distribution=st["distribution"], theta=st["theta"],
+            hot_frac=st["hot_frac"], hot_n=int(st["hot_n"]))

@@ -491,6 +491,58 @@ class IndexCache:
             return np.zeros(0, np.int32)
         return self.cfg.ms_of(self._rows[self._filled]).astype(np.int32)
 
+    # -- chaos plane: cold restart + full-state snapshot -------------------
+    def reset(self) -> None:
+        """Cold restart: drop the image (a CS that just joined the fleet
+        has nothing cached — its first read triggers a full fill, the
+        warm-up transient the chaos plane prices; DESIGN.md §13).
+        Cumulative counters are kept: they are this CS's *history*, and
+        the cluster conservation invariant sums them across the run."""
+        self._image = None
+        self._rows = np.zeros(0, np.int32)
+        self._filled = np.zeros(0, bool)
+        self._valid = np.zeros(0, bool)
+        self._fnv = np.zeros(0, np.uint8)
+        self._root = -1
+        self._splitty_phases = 0
+        self._rounds_since_sync = 0
+        self._needs_refresh = True
+
+    def export_state(self) -> tuple[Optional[dict], dict]:
+        """Snapshot the cache's full mutable state as
+        ``(image_arrays, scalars)`` — everything a tick-for-tick resume
+        needs (the image drives routing and maintenance pricing, so a
+        resumed run with a refilled-instead-of-restored cache would
+        diverge from the uninterrupted one)."""
+        image = None
+        if self._image is not None:
+            image = {k: np.asarray(v) for k, v in self._image.items()}
+        scalars = dict(
+            counters=self.counters.as_dict(),
+            rounds_since_sync=self._rounds_since_sync,
+            splitty_phases=self._splitty_phases,
+            needs_refresh=self._needs_refresh,
+            maint_taken=list(self._maint_taken),
+        )
+        return image, scalars
+
+    def import_state(self, image: Optional[dict], scalars: dict) -> None:
+        """Restore a snapshot taken by :meth:`export_state`."""
+        if image is None:
+            self.reset()
+        else:
+            self._image = {k: jnp.asarray(v) for k, v in image.items()}
+            self._rows = np.asarray(image["rows"])
+            self._filled = self._rows != ROW_SENTINEL
+            self._valid = np.asarray(image["valid"]).copy()
+            self._fnv = np.asarray(image["fnv"]).copy()
+            self._root = int(image["root"])
+        self.counters = CacheCounters(**scalars["counters"])
+        self._rounds_since_sync = int(scalars["rounds_since_sync"])
+        self._splitty_phases = int(scalars["splitty_phases"])
+        self._needs_refresh = bool(scalars["needs_refresh"])
+        self._maint_taken = tuple(scalars["maint_taken"])
+
     # -- reporting ---------------------------------------------------------
     @property
     def hit_ratio(self) -> float:

@@ -142,6 +142,22 @@ def group_by_node(cfg: TreeConfig, node: jax.Array, cs: jax.Array,
     )
 
 
+def reset_glt(state, ms: int):
+    """Crash of memory server ``ms``: its GLT lives in NIC on-chip SRAM,
+    so a crash *zeroes* that server's lock rows (every lock word free,
+    every in-flight handover chain broken).
+
+    The functional plane acquires and releases within a write phase —
+    between waves the GLT is quiescent — so the reset is a semantic
+    no-op at wave boundaries; its job is to make the on-chip loss
+    explicit so recovery can assert the post-restart lock state is clean
+    and the chaos tests can pin that locks are *free*, not leaked, after
+    a crash (DESIGN.md §13).  CS-side LLT wait queues are untouched:
+    they are compute-server memory and survive an MS crash.
+    """
+    return state._replace(glt=state.glt.at[ms].set(0))
+
+
 def cross_cs_contention(leaves_by_cs) -> dict:
     """Cross-CS conflict decomposition of one cluster wave (numpy, host).
 

@@ -125,6 +125,22 @@ class ServerClock:
                  int(self.atomic_free_ps.max(initial=0)))
         return hi / PS_PER_S
 
+    def reset_ms(self, ms: int, restart_s: float) -> None:
+        """Crash/restart of memory server ``ms``: its NIC message unit
+        and atomic unit come back *empty* at ``restart_s``.
+
+        A crash destroys the on-NIC queue — whatever backlog the dead
+        server had accepted is gone, not carried.  Without this reset a
+        restarted MS would keep its pre-crash busy frontier and verbs
+        released after the restart would queue behind phantom work
+        (tests/test_netsim_trace.py pins the single-verb latency).  The
+        frontier is set to the restart tick itself: the server cannot
+        serve before it is back, and it owes nothing from before.
+        """
+        t = np.int64(round(float(restart_s) * PS_PER_S))
+        self.nic_free_ps[ms] = t
+        self.atomic_free_ps[ms] = t
+
 
 # --------------------------------------------------------------------------
 # shared grid + result assembly

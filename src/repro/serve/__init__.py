@@ -11,7 +11,7 @@ max-sustainable-load per system (:mod:`.sweep`).
 """
 from repro.serve.arrivals import (ARRIVAL_KINDS, bursty_arrivals,
                                   diurnal_arrivals, make_arrivals,
-                                  poisson_arrivals)
+                                  poisson_arrivals, spliced_arrivals)
 from repro.serve.loop import (KIND_ORDER, materialize_ops, run_open_loop,
                               simulate_station, station_trace)
 from repro.serve.sweep import load_sweep
@@ -20,4 +20,5 @@ __all__ = [
     "ARRIVAL_KINDS", "KIND_ORDER", "bursty_arrivals", "diurnal_arrivals",
     "load_sweep", "make_arrivals", "materialize_ops", "poisson_arrivals",
     "run_open_loop", "simulate_station", "station_trace",
+    "spliced_arrivals",
 ]

@@ -162,3 +162,30 @@ def make_arrivals(kind: str, rate_ops_s: float, n: int, *, seed: int = 0,
                                 period_s=diurnal_period_s, peak=diurnal_peak)
     raise ValueError(f"unknown arrival process {kind!r}; "
                      f"known: {', '.join(ARRIVAL_KINDS)}")
+
+
+def spliced_arrivals(phases, seed: int = 0, **kw) -> np.ndarray:
+    """Concatenate arrival processes back-to-back on one timeline.
+
+    ``phases`` is a sequence of ``(kind, rate_ops_s, n)`` tuples; each
+    phase's stream starts where the previous phase's last arrival
+    landed, so the splice is a single monotone int64-ps series whose
+    rate changes mid-stream — the open-loop face of the chaos plane's
+    skew shifts and hot-key storms (a storm is a high-rate phase spliced
+    between two nominal ones).  Zero-length phases contribute nothing
+    but still hold their position in the per-phase seed derivation, so
+    adding or emptying a phase never reseeds its neighbours.  Each phase
+    draws from an independent child seed of ``seed``
+    (:class:`numpy.random.SeedSequence` spawn-by-index), making the
+    whole splice reproducible from ``(phases, seed)`` alone.
+    """
+    out, t0 = [], np.int64(0)
+    for i, (kind, rate, n) in enumerate(phases):
+        if int(n) == 0:
+            continue
+        child = int(np.random.SeedSequence(
+            [int(seed), i]).generate_state(1)[0])
+        ts = make_arrivals(kind, rate, int(n), seed=child, **kw) + t0
+        t0 = ts[-1]
+        out.append(ts)
+    return np.concatenate(out) if out else np.zeros(0, np.int64)

@@ -63,6 +63,21 @@ def latest_ranks(rng, n: int, nspace: int, theta: float) -> np.ndarray:
     return np.maximum(0, nspace - 1 - zipf_ranks(rng, n, nspace, theta))
 
 
+def hotspot_ranks(rng, n: int, nspace: int, hot_frac: float,
+                  hot_n: int) -> np.ndarray:
+    """YCSB HotspotGenerator: a ``hot_frac`` share of accesses hits a
+    fixed hot set of ``hot_n`` ranks, the rest is uniform over the whole
+    space.  The chaos plane's hot-key *storms* are skew shifts onto this
+    distribution — far spikier than any zipfian theta, concentrating the
+    fleet on a handful of leaves (DESIGN.md §13)."""
+    nspace = max(int(nspace), 1)
+    hot_n = max(1, min(int(hot_n), nspace))
+    hot = rng.random(n) < hot_frac
+    ranks = rng.integers(0, nspace, size=n).astype(np.int64)
+    return np.where(hot, rng.integers(0, hot_n, size=n).astype(np.int64),
+                    ranks)
+
+
 def scramble(ranks: np.ndarray, keyspace: int) -> np.ndarray:
     """Map insertion ranks to keys (deterministic scatter across keyspace)."""
     return ((np.asarray(ranks, np.int64) * SCRAMBLE) % keyspace
@@ -70,7 +85,8 @@ def scramble(ranks: np.ndarray, keyspace: int) -> np.ndarray:
 
 
 def draw_keys(rng, n: int, *, distribution: str, theta: float,
-              nspace: int, keyspace: int) -> np.ndarray:
+              nspace: int, keyspace: int, hot_frac: float = 0.9,
+              hot_n: int = 64) -> np.ndarray:
     """Draw ``n`` keys of live records under the given distribution."""
     if distribution == "uniform":
         ranks = rng.integers(0, max(nspace, 1), size=n).astype(np.int64)
@@ -78,6 +94,8 @@ def draw_keys(rng, n: int, *, distribution: str, theta: float,
         ranks = latest_ranks(rng, n, nspace, theta)
     elif distribution == "zipfian":
         ranks = zipf_ranks(rng, n, nspace, theta)
+    elif distribution == "hotspot":
+        ranks = hotspot_ranks(rng, n, nspace, hot_frac, hot_n)
     else:
         raise ValueError(f"unknown distribution: {distribution!r}")
     return scramble(ranks, keyspace)

@@ -22,10 +22,64 @@ from __future__ import annotations
 import dataclasses
 
 OP_KINDS = ("read", "insert", "update", "delete", "scan", "rmw")
-DISTRIBUTIONS = ("zipfian", "uniform", "latest")
+DISTRIBUTIONS = ("zipfian", "uniform", "latest", "hotspot")
 #: Arrival processes for the open-loop serving plane (repro.serve);
 #: canonical here so the spec validates without importing the plane.
 ARRIVAL_KINDS = ("closed", "poisson", "bursty", "diurnal")
+#: Fault kinds the chaos plane (repro.chaos; DESIGN.md §13) can inject;
+#: canonical here — like ARRIVAL_KINDS — so a spec carrying a fault
+#: schedule validates without importing the plane.
+FAULT_KINDS = ("ms_crash", "cs_leave", "cs_join", "skew_shift")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """One declarative fault on the simulation's shared time grid.
+
+    The chaos plane (:mod:`repro.chaos`) fires the event at the first
+    scheduler-round boundary whose simulated time has reached ``at_s``
+    (crash *effects* land mid-wave — see ``ChaosRunner``).  Which extra
+    fields matter depends on ``kind``:
+
+    * ``ms_crash``   — ``ms`` crashes, losing its HOCL on-chip lock table
+      (GLT rows) and, with ``lose_memory``, its share of the pooled
+      memory (recovery then restores the last checkpoint and replays the
+      redo log); the server restarts ``down_s`` simulated seconds later
+      with an empty NIC.
+    * ``cs_leave``   — compute server ``cs`` leaves; its op stream fails
+      over to the surviving CSs.
+    * ``cs_join``    — ``cs`` (re)joins with a **cold** index cache.
+    * ``skew_shift`` — the key distribution changes from here on
+      (``distribution``/``theta``/``hot_frac``/``hot_n``; empty/negative
+      fields keep the current value).  A hot-key storm is a shift onto
+      ``hotspot`` and a later shift back.
+    """
+
+    kind: str
+    at_s: float
+    ms: int = 0                  # ms_crash target
+    down_s: float = 0.0          # ms_crash restart delay
+    lose_memory: bool = False    # ms_crash: pooled memory lost too
+    cs: int = 0                  # cs_leave / cs_join target
+    distribution: str = ""       # skew_shift ("" = keep current)
+    theta: float = -1.0          # skew_shift (< 0 = keep current)
+    hot_frac: float = -1.0       # skew_shift hotspot share (< 0 = keep)
+    hot_n: int = 0               # skew_shift hot-set size (0 = keep)
+
+    def __post_init__(self):
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r} "
+                             f"(want one of {FAULT_KINDS})")
+        if self.at_s < 0:
+            raise ValueError(f"fault at_s must be >= 0, got {self.at_s}")
+        if self.kind == "ms_crash" and self.down_s < 0:
+            raise ValueError(f"ms_crash down_s must be >= 0, "
+                             f"got {self.down_s}")
+        if self.kind == "skew_shift" and self.distribution \
+                and self.distribution not in DISTRIBUTIONS:
+            raise ValueError(
+                f"skew_shift distribution {self.distribution!r} "
+                f"unknown (want one of {DISTRIBUTIONS})")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -39,12 +93,17 @@ class WorkloadSpec:
     delete: float = 0.0
     scan: float = 0.0
     rmw: float = 0.0
-    distribution: str = "zipfian"   # zipfian | uniform | latest
+    distribution: str = "zipfian"   # zipfian | uniform | latest | hotspot
     theta: float = 0.99             # zipfian/latest skew (0 => uniform)
+    hot_frac: float = 0.9           # hotspot: share of ops on the hot set
+    hot_n: int = 64                 # hotspot: hot-set size (records)
     scan_len: int = 10              # entries per scan op
     load_records: int = 60_000      # records bulk-loaded before the run
     ops: int = 8_192                # run-phase operation count
     batch: int = 1_024              # ops per batched wave
+
+    # -- chaos plane (repro.chaos; DESIGN.md §13) ----------------------
+    faults: tuple = ()              # FaultEvent schedule (empty = no faults)
 
     # -- open-loop serving plane (repro.serve; DESIGN.md §12) ----------
     arrival: str = "closed"         # closed | poisson | bursty | diurnal
@@ -86,6 +145,18 @@ class WorkloadSpec:
                     f"workload {self.name!r}: diurnal arrivals need "
                     f"1 < peak <= 2 and period > 0 (got peak="
                     f"{self.diurnal_peak}, period={self.diurnal_period_s})")
+        if self.distribution == "hotspot":
+            if not 0.0 <= self.hot_frac <= 1.0 or self.hot_n < 1:
+                raise ValueError(
+                    f"workload {self.name!r}: hotspot needs "
+                    f"0 <= hot_frac <= 1 and hot_n >= 1 (got "
+                    f"{self.hot_frac}, {self.hot_n})")
+        for ev in self.faults:
+            if not isinstance(ev, FaultEvent):
+                raise ValueError(
+                    f"workload {self.name!r}: faults must be FaultEvent "
+                    f"instances, got {type(ev).__name__}")
+        object.__setattr__(self, "faults", tuple(self.faults))
 
     def replace(self, **kw) -> "WorkloadSpec":
         return dataclasses.replace(self, **kw)

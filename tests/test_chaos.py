@@ -1,0 +1,356 @@
+"""Chaos plane (DESIGN.md §13): the differential recovery harness.
+
+Three guarantees, asserted for both systems and all fault kinds:
+
+1. **Differential correctness** — every faulted run converges to exactly
+   the tree contents of the fault-free oracle (an ``OracleIndex`` replay
+   of the *executed* write log); an MS crash without memory loss is
+   bit-identical to the un-faulted run.
+2. **Conservation across crash boundaries** — merged-timeline verb /
+   doorbell / byte totals still equal the per-CS functional sums after
+   abandon-and-re-derive or restore-and-replay recovery.
+3. **Tick-for-tick resume** — a fresh runner restored from a mid-run
+   checkpoint continues with *identical merged-trace digests* to the
+   uninterrupted run.
+
+Plus seeded + hypothesis properties over random fault schedules.
+"""
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+
+from repro.chaos import (ChaosRunner, oracle_replay, recovery_trace,
+                         requeue_repairs, schedule_for_horizon,
+                         tree_contents)
+from repro.chaos import faults as chaos_faults
+from repro.cluster import build_cluster, run_cluster
+from repro.cluster.sched import VAL_MASK
+from repro.core.netsim import FG_PLUS, SHERMAN
+from repro.core.tree import TreeConfig
+from repro.workloads.keygen import scramble
+from repro.workloads.spec import FaultEvent, WorkloadSpec
+
+pytestmark = pytest.mark.chaos
+
+CFG = TreeConfig(n_ms=2, nodes_per_ms=1024, fanout=8, n_locks_per_ms=512,
+                 max_height=6, n_cs=4)
+RECORDS = 2_000
+MIX = WorkloadSpec(name="chaos-mix", read=0.3, update=0.3, insert=0.2,
+                   delete=0.1, rmw=0.1, load_records=RECORDS, ops=640,
+                   batch=128)
+SYSTEMS = {"sherman": SHERMAN, "fg+": FG_PLUS}
+
+
+def _build(feat):
+    return build_cluster(feat, CFG, n_clients=8, records=RECORDS,
+                         cache_bytes=4 << 20, sync_rounds=2)
+
+
+def _loaded():
+    """The exact bulk-load records build_cluster used (seed 0)."""
+    rng = np.random.default_rng(0)
+    keys = scramble(np.arange(RECORDS, dtype=np.int64), 1 << 20)
+    return keys, rng.integers(0, VAL_MASK, size=RECORDS)
+
+
+def _assert_oracle(runner):
+    got = tree_contents(runner.cluster.state)
+    want = dict(oracle_replay(*_loaded(), runner.write_log).items())
+    assert got == want
+    assert runner.cluster.conservation_ok()
+
+
+@pytest.fixture(scope="module")
+def baseline():
+    """Fault-free reference per system: digests, contents, horizon."""
+    out = {}
+    for name, feat in SYSTEMS.items():
+        cl = _build(feat)
+        cl.record_traces()
+        run_cluster(cl, MIX, seed=1)
+        out[name] = cl
+    return out
+
+
+# --------------------------------------------------------------------------
+# the runner is a faithful run_cluster when nothing fails
+# --------------------------------------------------------------------------
+
+def test_empty_schedule_matches_run_cluster(baseline):
+    """Same draws, same waves, same merged traces: the chaos runner with
+    no faults is run_cluster, digest for digest."""
+    cl = _build(SHERMAN)
+    cl.record_traces()
+    r = ChaosRunner(cl, MIX, seed=1).run()
+    ref = baseline["sherman"]
+    assert cl.trace_log == ref.trace_log
+    assert tree_contents(cl.state) == tree_contents(ref.state)
+    assert r.done == MIX.ops
+    _assert_oracle(r)
+
+
+# --------------------------------------------------------------------------
+# MS crash: on-chip loss, downtime, re-derivation, full memory loss
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("system", sorted(SYSTEMS))
+def test_ms_crash_bit_identical(baseline, system):
+    """Crash + GLT loss + repair abandonment with surviving DRAM must
+    converge to the *bit-identical* final tree of the un-faulted run:
+    the GLT is quiescent between waves and re-derived repairs complete
+    the same half-splits."""
+    ref = baseline[system]
+    h = ref.counters["sim_time_s"]
+    spec = MIX.replace(faults=(
+        FaultEvent("ms_crash", at_s=0.3 * h, ms=0, down_s=0.02 * h),
+        FaultEvent("ms_crash", at_s=0.6 * h, ms=1, down_s=0.01 * h),
+    ))
+    r = ChaosRunner(_build(SYSTEMS[system]), spec, seed=1).run()
+    crashes = [f for f in r.fault_log if f["kind"] == "ms_crash"]
+    assert len(crashes) == 2
+    for st_ref, st in zip(ref.state, r.cluster.state):
+        np.testing.assert_array_equal(np.asarray(st_ref), np.asarray(st))
+    assert (np.asarray(r.cluster.state.glt) == 0).all()
+    _assert_oracle(r)
+    # downtime stalls the clock: the faulted run is strictly longer
+    assert r.cluster.counters["sim_time_s"] > h
+
+
+def test_ms_crash_lose_memory_replays(tmp_path, baseline):
+    """Full memory loss: the tree image restores from the checkpoint and
+    the redo log replays every wave since — same final contents, and the
+    replay is visible in the fault log."""
+    h = baseline["sherman"].counters["sim_time_s"]
+    spec = MIX.replace(faults=(
+        FaultEvent("ms_crash", at_s=0.55 * h, ms=1, down_s=0.03 * h,
+                   lose_memory=True),))
+    r = ChaosRunner(_build(SHERMAN), spec, seed=1,
+                    ckpt_dir=str(tmp_path), ckpt_every=2).run()
+    crash = [f for f in r.fault_log if f["kind"] == "ms_crash"]
+    assert len(crash) == 1 and crash[0]["lose_memory"]
+    assert crash[0]["replayed_waves"] >= 1
+    assert tree_contents(r.cluster.state) == \
+        tree_contents(baseline["sherman"].state)
+    _assert_oracle(r)
+    rep = r.report()
+    row = [f for f in rep["faults"] if f["kind"] == "ms_crash"][0]
+    assert row["ttr_s"] is not None and math.isfinite(row["ttr_s"])
+    assert row["degraded_mops"] > 0
+
+
+def test_ms_crash_lose_memory_needs_checkpoint():
+    spec = MIX.replace(faults=(
+        FaultEvent("ms_crash", at_s=0.0, ms=0, lose_memory=True),))
+    with pytest.raises(RuntimeError, match="checkpoint"):
+        ChaosRunner(_build(SHERMAN), spec, seed=1).run()
+
+
+def test_crash_strands_and_rederives_repairs():
+    """The mechanism itself: a wave run with drain=False leaves its
+    half-splits pending; abandon + re-derive + drain completes them to
+    the same tree a normally-drained twin reaches."""
+    # a clustered key window: ~16 fresh keys per covered leaf, enough to
+    # overflow and split many of them inside one wave
+    keys = (500_000 + np.arange(192) * 200).astype(np.int32)
+
+    def wave(cl, drain):
+        kb = [keys[i::4] for i in range(4)]
+        cl.write_wave(kb, kb, drain=drain)
+
+    cl_ref = _build(SHERMAN)
+    wave(cl_ref, drain=True)
+    cl = _build(SHERMAN)
+    wave(cl, drain=False)
+    assert cl._repair_backlog > 0          # half-splits stranded in flight
+    mirror = chaos_faults.abandon_repairs(cl)
+    assert mirror is not None and mirror["valid"].sum() > 0
+    assert cl._repair_backlog == 0         # queue abandoned, tree B-link-ok
+    requeue_repairs(cl, mirror)
+    cl.drain_repairs()
+    for a, b in zip(cl_ref.state, cl.state):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_recovery_trace_shape():
+    """Recovery traffic: background, independent, byte-conserving."""
+    t = recovery_trace(CFG, 1, scan_rows=1000, small_bytes=64)
+    assert (t.ms == 1).all() and (t.lane == -1).all()
+    assert (t.dep == -1).all() and (t.doorbell == np.arange(t.n_verbs)).all()
+    assert t.nbytes.sum() == CFG.n_locks_per_ms * 2 + 1000 * 64
+    t2 = recovery_trace(CFG, 0, restore_rows=500)
+    assert t2.nbytes.sum() == CFG.n_locks_per_ms * 2 + 500 * CFG.node_bytes
+    assert t2.n_verbs <= 1 + chaos_faults.MAX_RECOVERY_VERBS
+
+
+# --------------------------------------------------------------------------
+# CS churn and skew storms
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("system", sorted(SYSTEMS))
+def test_cs_leave_join_failover(baseline, system):
+    """A dead CS's clients fail over (same op stream, new placement); a
+    rejoining CS comes back cold.  The executed write log stays
+    oracle-correct and conservation holds through the churn."""
+    h = baseline[system].counters["sim_time_s"]
+    spec = MIX.replace(faults=(
+        FaultEvent("cs_leave", at_s=0.3 * h, cs=2),
+        FaultEvent("cs_join", at_s=0.65 * h, cs=2),
+    ))
+    r = ChaosRunner(_build(SYSTEMS[system]), spec, seed=1).run()
+    kinds = [f["kind"] for f in r.fault_log if not f.get("skipped")]
+    assert kinds == ["cs_leave", "cs_join"]
+    _assert_oracle(r)
+    # while dead, slot 2's batches ran on other CSs: its op counter froze
+    ops_by_cs = [n.counters["ops"] for n in r.cluster.nodes]
+    ref_ops = [n.counters["ops"] for n in baseline[system].nodes]
+    assert ops_by_cs[2] < ref_ops[2]
+    assert sum(ops_by_cs) == sum(ref_ops)   # nothing lost, only moved
+
+
+def test_cs_leave_never_kills_last(baseline):
+    h = baseline["sherman"].counters["sim_time_s"]
+    spec = MIX.replace(faults=tuple(
+        FaultEvent("cs_leave", at_s=0.1 * h * (i + 1), cs=i)
+        for i in range(4)))
+    r = ChaosRunner(_build(SHERMAN), spec, seed=1).run()
+    leaves = [f for f in r.fault_log if f["kind"] == "cs_leave"]
+    assert sum(1 for f in leaves if f.get("skipped")) == 1
+    assert sum(r.alive) == 1
+    _assert_oracle(r)
+
+
+def test_skew_shift_storm(baseline):
+    """A hot-key storm (hotspot over 8 keys) and its lift both fire;
+    draws stay deterministic (RNG call counts unchanged) so the run is
+    still oracle-correct, and the storm leaves no residue: after the
+    lift the stream spec is back to the original distribution."""
+    h = baseline["sherman"].counters["sim_time_s"]
+    spec = MIX.replace(faults=(
+        FaultEvent("skew_shift", at_s=0.4 * h, distribution="hotspot",
+                   hot_frac=0.95, hot_n=8),
+        FaultEvent("skew_shift", at_s=0.75 * h, distribution="zipfian",
+                   theta=0.99),
+    ))
+    r = ChaosRunner(_build(SHERMAN), spec, seed=1).run()
+    shifts = [f for f in r.fault_log if f["kind"] == "skew_shift"]
+    assert [s["distribution"] for s in shifts] == ["hotspot", "zipfian"]
+    assert r.streams.spec.distribution == "zipfian"
+    _assert_oracle(r)
+
+
+# --------------------------------------------------------------------------
+# checkpoint / resume: tick-for-tick
+# --------------------------------------------------------------------------
+
+def _runner(tmp, tag, spec, record=True, every=3):
+    cl = _build(SHERMAN)
+    if record:
+        cl.record_traces()
+    return ChaosRunner(cl, spec, seed=1, ckpt_dir=f"{tmp}/{tag}",
+                       ckpt_every=every)
+
+
+def test_checkpoint_resume_tick_for_tick(tmp_path, baseline):
+    """A fresh runner restored from the round-3 snapshot continues with
+    merged-trace digests equal to the uninterrupted run's tail — the
+    strongest no-divergence statement the performance plane can make."""
+    ra = _runner(tmp_path, "a", MIX).run()
+    rb = _runner(tmp_path, "b", MIX)
+    rb.run(until_round=3)
+    n_dig = len(rb.cluster.trace_log)
+    rb2 = _runner(tmp_path, "b", MIX)          # fresh build, same recipe
+    assert rb2.load_latest() == 3
+    rb2.cluster.record_traces()
+    rb2.run()
+    assert rb2.cluster.trace_log == ra.cluster.trace_log[n_dig:]
+    assert rb2.cluster.counters["sim_time_s"] == \
+        ra.cluster.counters["sim_time_s"]
+    assert rb2.done == ra.done
+    for a, b in zip(ra.cluster.state, rb2.cluster.state):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_resume_across_fault(tmp_path, baseline):
+    """Resume before a memory-losing crash: the resumed run and the
+    uninterrupted run see the same crash, replay the same redo log, and
+    land on the same final state and horizon."""
+    h = baseline["sherman"].counters["sim_time_s"]
+    spec = MIX.replace(faults=(
+        FaultEvent("ms_crash", at_s=0.7 * h, ms=0, down_s=0.01 * h,
+                   lose_memory=True),))
+    ra = _runner(tmp_path, "a", spec, record=False).run()
+    rb = _runner(tmp_path, "b", spec, record=False)
+    rb.run(until_round=3)
+    rb2 = _runner(tmp_path, "b", spec, record=False)
+    rb2.load_latest()
+    rb2.run()
+    assert tree_contents(ra.cluster.state) == \
+        tree_contents(rb2.cluster.state)
+    assert ra.cluster.counters["sim_time_s"] == \
+        rb2.cluster.counters["sim_time_s"]
+    assert [f["kind"] for f in rb2.fault_log] == \
+        [f["kind"] for f in ra.fault_log]
+
+
+# --------------------------------------------------------------------------
+# properties: random schedules never break the invariants
+# --------------------------------------------------------------------------
+
+def test_standard_schedule_covers_kinds():
+    sched = schedule_for_horizon(1.0)
+    kinds = {ev.kind for ev in sched}
+    assert kinds == {"ms_crash", "cs_leave", "cs_join", "skew_shift"}
+    assert list(sched) == sorted(sched, key=lambda e: e.at_s)
+    assert all(0 <= ev.at_s < 1.0 for ev in sched)
+    # declarative surface round-trips through the spec
+    spec = MIX.replace(faults=sched)
+    assert [dataclasses.asdict(f) for f in spec.faults] == \
+        [dataclasses.asdict(f) for f in sched]
+
+
+@pytest.mark.slow
+def test_property_random_schedules(tmp_path, baseline):
+    """Hypothesis sweep: any schedule of crashes / churn / skew shifts
+    keeps the differential and conservation invariants."""
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    h = baseline["sherman"].counters["sim_time_s"]
+    event = st.one_of(
+        st.builds(FaultEvent, st.just("ms_crash"),
+                  at_s=st.floats(0, h, allow_nan=False),
+                  ms=st.integers(0, CFG.n_ms - 1),
+                  down_s=st.floats(0, 0.05 * h, allow_nan=False),
+                  lose_memory=st.booleans()),
+        st.builds(FaultEvent, st.just("cs_leave"),
+                  at_s=st.floats(0, h, allow_nan=False),
+                  cs=st.integers(0, CFG.n_cs - 1)),
+        st.builds(FaultEvent, st.just("cs_join"),
+                  at_s=st.floats(0, h, allow_nan=False),
+                  cs=st.integers(0, CFG.n_cs - 1)),
+        st.builds(FaultEvent, st.just("skew_shift"),
+                  at_s=st.floats(0, h, allow_nan=False),
+                  distribution=st.sampled_from(
+                      ("uniform", "hotspot", "zipfian")),
+                  theta=st.floats(0.5, 0.99), hot_n=st.integers(4, 64)))
+
+    import tempfile
+
+    @settings(max_examples=6, deadline=None)
+    @given(st.lists(event, min_size=1, max_size=5),
+           st.integers(0, 2 ** 31 - 1))
+    def inner(faults, seed):
+        spec = MIX.replace(ops=384, faults=tuple(faults))
+        # one fresh checkpoint dir per example: a stale snapshot from a
+        # different schedule must never be restorable
+        ckpt = tempfile.mkdtemp(dir=tmp_path)
+        r = ChaosRunner(_build(SHERMAN), spec, seed=1,
+                        ckpt_dir=ckpt, ckpt_every=2).run()
+        _assert_oracle(r)
+        assert (np.asarray(r.cluster.state.glt) == 0).all()
+        rep = r.report()
+        assert rep["conservation_ok"]
+
+    inner()

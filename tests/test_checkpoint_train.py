@@ -47,6 +47,60 @@ def test_atomicity_no_partial_dirs(tmp_path):
     assert not any(d.startswith(".tmp") for d in os.listdir(tmp_path))
 
 
+# -- corruption injection: every leaf is validated against the manifest ----
+# (the chaos plane's crash-recovery path restores from these files; a
+# corrupt leaf must fail loudly, never load silently)
+
+def _leaf_path(tmp_path, step, name="leaf_00000"):
+    return os.path.join(tmp_path, f"step_{step:08d}", name + ".npy")
+
+
+def test_restore_rejects_swapped_dtype(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    tree = {"x": jnp.arange(8, dtype=jnp.int32)}
+    mgr.save(tree, step=1)
+    np.save(_leaf_path(tmp_path, 1), np.arange(8, dtype=np.float64))
+    with pytest.raises(ValueError, match="dtype"):
+        mgr.restore(tree, 1)
+    with pytest.raises(ValueError, match="dtype"):
+        mgr.restore_raw(1)
+
+
+def test_restore_rejects_resized_leaf(tmp_path):
+    """Same dtype, wrong shape — e.g. a stale leaf from an older run with
+    a different pool geometry."""
+    mgr = CheckpointManager(str(tmp_path))
+    tree = {"x": jnp.zeros((4, 3), jnp.float32)}
+    mgr.save(tree, step=2)
+    np.save(_leaf_path(tmp_path, 2), np.zeros((4, 7), np.float32))
+    with pytest.raises(ValueError, match="shape"):
+        mgr.restore(tree, 2)
+
+
+def test_restore_rejects_truncated_npy(tmp_path):
+    """A crash mid-write leaves a torn file: unreadable, not mis-loaded."""
+    mgr = CheckpointManager(str(tmp_path))
+    tree = {"x": jnp.arange(1024)}
+    mgr.save(tree, step=3)
+    path = _leaf_path(tmp_path, 3)
+    blob = open(path, "rb").read()
+    with open(path, "wb") as f:
+        f.write(blob[:len(blob) // 3])
+    with pytest.raises(ValueError, match="unreadable|shape|dtype"):
+        mgr.restore(tree, 3)
+
+
+def test_restore_latest_skips_nothing_validates_everything(tmp_path):
+    """restore_latest goes through the same validated path."""
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    tree = {"x": jnp.zeros(5)}
+    mgr.save({"x": jnp.ones(5)}, step=1)
+    mgr.save({"x": jnp.full(5, 2.0)}, step=2)
+    np.save(_leaf_path(tmp_path, 2), np.zeros(5, np.int8))
+    with pytest.raises(ValueError):
+        mgr.restore_latest(tree)
+
+
 def test_train_loop_and_resume(tmp_path):
     cfg = get_reduced("smollm_135m")
     api = build(cfg)

@@ -250,3 +250,40 @@ def test_run_result_reports_verb_plane(tmp_path):
     assert r.verbs > 0 and r.doorbells > 0
     assert r.doorbells_saved == r.verbs - r.doorbells > 0
     json.dumps(r.to_dict())
+
+
+def test_server_clock_reset_ms_clears_backlog():
+    """Crash semantics of the carried clock: a restarted MS serves a
+    fresh verb at the bare service+RTT floor from the restart tick,
+    while a non-reset twin still queues it behind the pre-crash backlog.
+    The on-NIC queue died with the server — the frontier must not
+    carry it."""
+    from repro.serve import station_trace
+
+    # pile a deep backlog onto MS 0 (all ops arrive at t=0)
+    backlog = station_trace(np.zeros(64), 4096, n_ms=1)
+    clock = netsim.ServerClock.fresh(2)
+    netsim.simulate(backlog, NET, 2, True, clock=clock)
+    busy_s = clock.nic_free_ps[0] / netsim.PS_PER_S
+    assert busy_s > 0
+
+    stale = netsim.ServerClock(clock.nic_free_ps.copy(),
+                               clock.atomic_free_ps.copy())
+    restart_s = busy_s / 4                   # restart well before the
+    clock.reset_ms(0, restart_s)             # phantom backlog would end
+    assert clock.nic_free_ps[0] == clock.atomic_free_ps[0] \
+        == np.int64(round(restart_s * netsim.PS_PER_S))
+    assert clock.nic_free_ps[1] == stale.nic_free_ps[1]  # others untouched
+
+    # single verb released at the restart: served immediately
+    probe_at = np.array([restart_s])
+    probe = station_trace(probe_at, 4096, n_ms=1)
+    svc = max(1.0 / NET.nic_iops_small, 4096 / NET.nic_bw_Bps)
+    floor = np.rint(svc * netsim.PS_PER_S) / netsim.PS_PER_S \
+        + round(NET.rtt_s * netsim.PS_PER_S) / netsim.PS_PER_S
+    done_fresh = netsim.simulate(probe, NET, 2, True,
+                                 clock=clock)["latency_s"][0]
+    done_stale = netsim.simulate(probe, NET, 2, True,
+                                 clock=stale)["latency_s"][0]
+    assert done_fresh == pytest.approx(restart_s + floor, abs=1e-12)
+    assert done_stale > done_fresh           # phantom queueing without reset

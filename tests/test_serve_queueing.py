@@ -387,3 +387,59 @@ def test_spec_validates_open_loop_fields():
         base.replace(arrival="diurnal", offered_mops=1.0, diurnal_peak=3.0)
     ok = base.replace(arrival="poisson", offered_mops=1.5)
     assert ok.offered_mops == 1.5
+
+
+# --------------------------------------------------------------------------
+# spliced arrival streams (chaos-plane skew/storm windows)
+# --------------------------------------------------------------------------
+
+def test_spliced_arrivals_rate_change_mid_stream():
+    """A rate change mid-wave: the spliced stream is one monotone int64
+    series whose empirical gap mean tracks each phase's rate."""
+    from repro.serve import spliced_arrivals
+    ts = spliced_arrivals([("poisson", 1e5, 2_000),
+                           ("poisson", 8e5, 2_000)], seed=3)
+    assert ts.dtype == np.int64 and ts.size == 4_000
+    assert (np.diff(ts) >= 0).all()
+    gaps_a = np.diff(ts[:2_000]) / 1e12
+    gaps_b = np.diff(ts[2_000:]) / 1e12
+    assert gaps_a.mean() == pytest.approx(1e-5, rel=0.15)
+    assert gaps_b.mean() == pytest.approx(1.25e-6, rel=0.15)
+    # the high-rate phase starts where the low-rate one ended
+    assert ts[2_000] >= ts[1_999]
+
+
+def test_spliced_arrivals_zero_length_phases():
+    """Empty phases contribute nothing and never reseed their
+    neighbours: dropping them entirely gives the identical stream."""
+    from repro.serve import spliced_arrivals
+    with_gaps = spliced_arrivals(
+        [("poisson", 2e5, 0), ("poisson", 4e5, 512),
+         ("bursty", 4e5, 0), ("poisson", 4e5, 0)], seed=9)
+    plain = spliced_arrivals(
+        [("poisson", 2e5, 0), ("poisson", 4e5, 512)], seed=9)
+    np.testing.assert_array_equal(with_gaps, plain)
+    assert spliced_arrivals([], seed=9).size == 0
+    assert spliced_arrivals([("poisson", 1e5, 0)], seed=9).size == 0
+
+
+def test_spliced_arrivals_deterministic_and_phase_independent():
+    """Same (phases, seed) => identical splice; each phase draws from
+    its own child seed, so editing one phase leaves the *first* phase's
+    arrivals untouched (prefix stability) and two phases at the same
+    rate still draw different streams."""
+    from repro.serve import spliced_arrivals
+    phases = [("poisson", 3e5, 256), ("diurnal", 6e5, 256),
+              ("poisson", 3e5, 256)]
+    a = spliced_arrivals(phases, seed=11)
+    b = spliced_arrivals(phases, seed=11)
+    np.testing.assert_array_equal(a, b)
+    assert not np.array_equal(a, spliced_arrivals(phases, seed=12))
+    # prefix stability under a later-phase edit
+    edited = spliced_arrivals(
+        [("poisson", 3e5, 256), ("bursty", 9e5, 64)], seed=11)
+    np.testing.assert_array_equal(a[:256], edited[:256])
+    # same kind+rate in two positions != same draw
+    twice = spliced_arrivals(
+        [("poisson", 3e5, 256), ("poisson", 3e5, 256)], seed=11)
+    assert not np.array_equal(np.diff(twice[:256]), np.diff(twice[256:]))

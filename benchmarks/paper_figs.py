@@ -448,3 +448,66 @@ def chaos_sweep_bench(records=6_000, n_ops=4_096, n_clients=16,
               f"{flags}")
     print(f"wrote {json_path}")
     return rows
+
+
+def obs_sweep(n_ops=1_024, records=8_000, tail_k=64,
+              json_path="BENCH_obs.json"):
+    """Observability sweep through the recording plane (DESIGN.md §14):
+    the full ablation ladder replayed with a :class:`repro.obs.Recorder`
+    attached, on a deliberately contended write-heavy batch (zipfian
+    0.99, two memory servers) where the lock chains are deep enough for
+    tail forensics to have something to say.
+
+    Per rung it reports the p99 tail's exact latency attribution
+    (nic_queue / atomic_ser / lock_wait / service, from the
+    critical-path walk), the all-ops attribution, the span-conservation
+    verdict and the maximum integer residual.
+
+    Writes ``BENCH_obs.json`` — the tail-forensics acceptance artifact
+    scripts/ci.sh gates on: zero residual and green span accounting on
+    every rung, and the HOCL story made quantitative — enabling the
+    hierarchical lock shifts the tail's attribution out of
+    lock-protocol wait and into NIC/data time (Fig. 10/11, per op).
+    """
+    import dataclasses as _dc
+
+    from repro.core.tree import TreeConfig
+    from repro.workloads import get_preset, run_systems, write_json
+
+    cfg = TreeConfig(n_ms=2, nodes_per_ms=8_192, fanout=16,
+                     n_locks_per_ms=4_096, max_height=7, n_cs=8)
+    ladder = [nm.lower() for nm, _ in ABLATION_LADDER]
+    spec = get_preset("write-intensive", theta=0.99, ops=n_ops,
+                      batch=max(128, n_ops // 2), load_records=records)
+    recorders = {}
+    results = run_systems(spec, ladder, cfg, recorders=recorders,
+                          tail_k=tail_k)
+    # the ladder's last rung *is* full Sherman — alias it
+    results.append(_dc.replace(results[-1], system="sherman"))
+    rows = []
+    print(f"\n== Observability sweep (write-intensive 0.99, "
+          f"{cfg.n_ms} MS, tail_k={tail_k}) ==")
+    print(f"{'system':14s} {'p99us':>9s} {'nic%':>6s} {'atom%':>6s} "
+          f"{'lock%':>6s} {'svc%':>6s} {'resid':>6s} {'spans':>6s}")
+    for r in results:
+        t = r.obs["tail_attribution"]
+        print(f"{r.system:14s} {r.p99_us:9.1f} "
+              f"{100 * t['nic_queue_frac']:6.1f} "
+              f"{100 * t['atomic_ser_frac']:6.1f} "
+              f"{100 * t['lock_wait_frac']:6.1f} "
+              f"{100 * t['service_frac']:6.1f} "
+              f"{r.obs['attr_residual_ps']:6d} "
+              f"{'OK' if r.obs['spans_ok'] else 'BAD':>6s}")
+        rows.append(csv_row(
+            f"obs/{r.system}", r.p99_us,
+            f"lock={t['lock_wait_frac']:.3f};"
+            f"nic={t['nic_queue_frac']:.3f};"
+            f"atomic={t['atomic_ser_frac']:.3f};"
+            f"service={t['service_frac']:.3f};"
+            f"residual_ps={r.obs['attr_residual_ps']};"
+            f"spans_ok={r.obs['spans_ok']}"))
+    write_json(json_path, spec, results,
+               extra={"kind": "obs", "ladder": ladder, "tail_k": tail_k,
+                      "n_ms": cfg.n_ms})
+    print(f"wrote {json_path}")
+    return rows

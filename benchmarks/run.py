@@ -18,7 +18,7 @@ def main(argv=None) -> None:
     ap.add_argument("--only", default="",
                     help="comma list: table1,fig10,fig11,fig12,fig13,"
                          "fig14,fig15,fig16,cache,ablation,scaling,"
-                         "throughput,load,chaos")
+                         "throughput,load,chaos,obs")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write rows to PATH (default "
                          "BENCH_paper_figs.json with --json '')")
@@ -79,6 +79,12 @@ def main(argv=None) -> None:
             records=4_000 if args.quick else 8_000,
             n_ops=2_048 if args.quick else 8_192,
             n_clients=8 if args.quick else 16)
+    if want("obs"):
+        # observability plane; always writes BENCH_obs.json (the
+        # tail-forensics acceptance artifact: exact attribution +
+        # span conservation per ladder rung)
+        rows += F.obs_sweep(n_ops=1_024 if args.quick else 4_096,
+                            records=8_000 if args.quick else 20_000)
     if want("throughput"):
         # harness-performance sweep; always writes BENCH_throughput.json
         # (wall-clock sim-ops/s + XLA compile counts — the PR 5 gate)

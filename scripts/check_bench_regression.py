@@ -1,0 +1,131 @@
+#!/usr/bin/env python
+"""Guard the checked-in BENCH artifacts against silent perf regressions.
+
+scripts/ci.sh regenerates ``BENCH_ablation.json``, ``BENCH_load.json``,
+``BENCH_chaos.json`` and ``BENCH_obs.json`` in the working tree; this
+script diffs those fresh numbers against the *committed* baselines
+(``git show HEAD:<file>``) and fails when any matched point regresses by
+more than ``--threshold`` (default 20%): tail latency up, or
+throughput / sustainable load down.
+
+Points are matched by identity — system name plus, where applicable, the
+offered rate or fault kind — so schedule or sweep-shape changes surface
+as explicit SKIP notes instead of bogus comparisons.  A file is skipped
+(with a note) when it is absent from HEAD (a brand-new artifact) or when
+its sweep scale (op count / record count) differs from the baseline's —
+quick-mode and full-mode runs are not comparable.
+
+Exit codes: 0 clean (or everything skipped), 1 regression, 2 bad usage.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import subprocess
+import sys
+
+FILES = ("BENCH_ablation.json", "BENCH_load.json", "BENCH_chaos.json",
+         "BENCH_obs.json")
+
+#: metric direction: True when larger values are worse (latency-like)
+LARGER_IS_WORSE = {"p99_us": True, "mops": False, "baseline_mops": False,
+                   "degraded_mops": False, "max_sustainable_mops": False}
+
+
+def _scale(doc: dict) -> tuple:
+    """The sweep's identity scale; comparisons across scales are bogus."""
+    spec = doc.get("spec", {})
+    return (spec.get("ops", doc.get("ops")),
+            spec.get("load_records", doc.get("records")),
+            doc.get("n_clients"))
+
+
+def _points(path: str, doc: dict) -> dict:
+    """Flatten one BENCH document into {(point-id, metric): value}."""
+    out = {}
+    kind = doc.get("kind")
+    if kind == "load_sweep":
+        for r in doc["results"]:
+            pid = (r["system"], round(r["offered_mops"], 6))
+            out[(pid, "p99_us")] = r["p99_us"]
+        for s, v in doc["max_sustainable_mops"].items():
+            out[((s,), "max_sustainable_mops")] = v
+    elif kind == "chaos":
+        for r in doc["results"]:
+            out[((r["system"],), "baseline_mops")] = r["baseline_mops"]
+            for f in r["faults"]:
+                if f.get("degraded_mops"):
+                    out[((r["system"], f["kind"]), "degraded_mops")] = \
+                        f["degraded_mops"]
+    else:                              # ablation / obs: plain result rows
+        for r in doc["results"]:
+            out[((r["system"],), "p99_us")] = r["p99_us"]
+            out[((r["system"],), "mops")] = r["mops"]
+    return out
+
+
+def _baseline(path: str) -> dict | None:
+    try:
+        blob = subprocess.run(["git", "show", f"HEAD:{path}"],
+                              capture_output=True, text=True, check=True)
+    except (subprocess.CalledProcessError, OSError):
+        return None
+    return json.loads(blob.stdout)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="fail on >threshold p99/throughput regressions in "
+                    "fresh BENCH files vs the committed baselines")
+    ap.add_argument("--threshold", type=float, default=0.20,
+                    help="allowed relative regression (default 0.20)")
+    ap.add_argument("--files", nargs="*", default=list(FILES))
+    args = ap.parse_args(argv)
+    if not 0 < args.threshold < 10:
+        ap.error(f"--threshold out of range: {args.threshold}")
+
+    bad = []
+    compared = 0
+    for path in args.files:
+        try:
+            fresh_doc = json.load(open(path))
+        except FileNotFoundError:
+            print(f"SKIP {path}: missing from the working tree "
+                  f"(generate it first — ci.sh does)")
+            continue
+        base_doc = _baseline(path)
+        if base_doc is None:
+            print(f"SKIP {path}: no committed baseline in HEAD")
+            continue
+        if _scale(base_doc) != _scale(fresh_doc):
+            print(f"SKIP {path}: sweep scale changed "
+                  f"{_scale(base_doc)} -> {_scale(fresh_doc)}")
+            continue
+        base, fresh = _points(path, base_doc), _points(path, fresh_doc)
+        for key in sorted(base.keys() - fresh.keys()):
+            print(f"SKIP {path}: point {key} gone from the fresh run")
+        for key in sorted(base.keys() & fresh.keys()):
+            (pid, metric), b, f = key, base[key], fresh[key]
+            if not (b and f):
+                continue
+            compared += 1
+            ratio = f / b
+            worse = (ratio > 1 + args.threshold
+                     if LARGER_IS_WORSE[metric]
+                     else ratio < 1 - args.threshold)
+            if worse:
+                bad.append(f"{path} {'/'.join(map(str, pid))} {metric}: "
+                           f"{b:.4g} -> {f:.4g} ({ratio:.2f}x)")
+    if bad:
+        print(f"\nREGRESSION ({len(bad)} point(s) past "
+              f"{args.threshold:.0%}):")
+        for line in bad:
+            print("  " + line)
+        return 1
+    print(f"bench regression check OK: {compared} points within "
+          f"{args.threshold:.0%} of the committed baselines")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

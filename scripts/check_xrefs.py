@@ -5,7 +5,15 @@ Scans ``src/``, ``docs/``, ``benchmarks/``, ``examples/`` and the README
 for dotted ``repro.*`` references and checks each against the real module
 tree under ``src/``.  A reference is accepted when it names a module or
 package, or an attribute that actually exists on an imported module
-(``repro.core.ops.lookup_batch``).  Run from the repo root:
+(``repro.core.ops.lookup_batch``).
+
+Also verifies the result-schema tables in docs/BENCHMARKS.md against the
+code: every field named in the ``results[i]`` table must be a real
+``repro.workloads.engine.RunResult`` dataclass field, and every key in
+the ``counters`` table must exist in ``ShermanIndex.counters`` — so the
+docs can never again drift to pre-rename counter names (the PR 5
+``rtts`` -> ``lane_doorbells``/``doorbells_p50`` class of staleness).
+Run from the repo root:
 
     python scripts/check_xrefs.py
 """
@@ -50,8 +58,59 @@ def _ok(ref: str) -> bool:
     return False
 
 
-def main() -> int:
+TOKEN = re.compile(r"`([a-z_][a-z_0-9]*)`")
+
+
+def _schema_table_fields(path="docs/BENCHMARKS.md"):
+    """Backticked names from the first column of the RunResult and
+    counters schema tables, keyed by which table they came from."""
+    section = None
+    fields = {"result": set(), "counter": set()}
+    with open(path) as f:
+        for line in f:
+            if line.startswith("#"):
+                if "`results[i]`" in line:
+                    section = "result"
+                elif "`counters`" in line:
+                    section = "counter"
+                else:
+                    section = None
+                continue
+            if section and line.startswith("|"):
+                first = line.split("|")[1]
+                if set(first.strip()) <= {"-"}:     # separator row
+                    continue
+                fields[section] |= set(TOKEN.findall(first))
+    return fields
+
+
+def _check_schema_tables() -> list:
+    import dataclasses
+
+    from repro.core.api import ShermanIndex
+    from repro.core.tree import TreeConfig
+    from repro.workloads.engine import RunResult
+
+    tables = _schema_table_fields()
+    real_fields = {f.name for f in dataclasses.fields(RunResult)}
+    tiny = TreeConfig(n_ms=1, nodes_per_ms=64, fanout=4,
+                      n_locks_per_ms=16, max_height=3, n_cs=1)
+    real_counters = set(ShermanIndex.empty(tiny).counters)
     bad = []
+    for name in sorted(tables["result"] - real_fields):
+        bad.append(f"docs/BENCHMARKS.md: results[i] schema names "
+                   f"{name!r}, which is not a RunResult field")
+    for name in sorted(tables["counter"] - real_counters):
+        bad.append(f"docs/BENCHMARKS.md: counters schema names "
+                   f"{name!r}, which is not in ShermanIndex.counters")
+    if not (tables["result"] and tables["counter"]):
+        bad.append("docs/BENCHMARKS.md: schema tables not found "
+                   "(heading layout changed?)")
+    return bad
+
+
+def main() -> int:
+    bad = _check_schema_tables()
     for top in SCAN:
         if os.path.isfile(top):
             files = [top]

@@ -5,6 +5,17 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}"
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 
+# every gated BENCH artifact must exist before its gate reads it — a
+# sweep that silently failed to write its file is a CI bug, not a pass
+require_bench() {
+    for f in "$@"; do
+        if [ ! -s "$f" ]; then
+            echo "FATAL: gated benchmark artifact $f is missing or empty" >&2
+            exit 1
+        fi
+    done
+}
+
 echo "== tier-1 tests =="
 python -m pytest -x -q
 
@@ -21,6 +32,7 @@ python -m pytest -q tests/test_throughput.py -k \
 
 echo "== throughput smoke gate (writes BENCH_throughput.json) =="
 python benchmarks/run.py --quick --only throughput
+require_bench BENCH_throughput.json
 python - <<'EOF'
 import json, math
 
@@ -49,6 +61,7 @@ EOF
 
 echo "== ablation sweep (verb plane, writes BENCH_ablation.json) =="
 python benchmarks/run.py --quick --only ablation
+require_bench BENCH_ablation.json
 python - <<'EOF'
 import json, math
 
@@ -75,6 +88,7 @@ EOF
 
 echo "== cluster scaling sweep (writes BENCH_scaling.json) =="
 python benchmarks/run.py --quick --only scaling
+require_bench BENCH_scaling.json
 python - <<'EOF'
 import json, math
 
@@ -111,6 +125,7 @@ EOF
 
 echo "== open-loop load sweep (serving plane, writes BENCH_load.json) =="
 python benchmarks/run.py --quick --only load
+require_bench BENCH_load.json
 python - <<'EOF'
 import json, math
 
@@ -150,6 +165,7 @@ EOF
 
 echo "== chaos sweep (fault injection, writes BENCH_chaos.json) =="
 python benchmarks/run.py --quick --only chaos
+require_bench BENCH_chaos.json
 python - <<'EOF'
 import json, math
 
@@ -183,6 +199,52 @@ print("chaos OK:",
                f"deg={c['degraded_mops']:.3f}Mops"
                for s, c in sorted(crash.items())))
 EOF
+
+echo "== observability sweep (tail forensics, writes BENCH_obs.json) =="
+python benchmarks/run.py --quick --only obs
+require_bench BENCH_obs.json
+python - <<'PYEOF'
+import json, math
+
+d = json.load(open("BENCH_obs.json"))
+assert d["kind"] == "obs"
+ladder = d["ladder"]
+res = {r["system"]: r for r in d["results"]}
+assert set(ladder) <= set(res) and "sherman" in res, sorted(res)
+FRACS = ("nic_queue_frac", "atomic_ser_frac", "lock_wait_frac",
+         "service_frac")
+for name, r in res.items():
+    obs = r["obs"]
+    # conservation: exact integer attribution + green span accounting
+    # on every rung
+    assert obs["attr_residual_ps"] == 0, (name, obs["attr_residual_ps"])
+    assert obs["spans_ok"], (name, "span accounting broken")
+    assert obs["verbs"] > 0 and obs["ops"] > 0, name
+    assert len(obs["tail"]) == d["tail_k"], (name, len(obs["tail"]))
+    for a in (obs["attribution"], obs["tail_attribution"]):
+        assert all(0 <= a[k] <= 1 for k in FRACS), (name, a)
+        assert abs(sum(a[k] for k in FRACS) - 1) < 1e-9, (name, a)
+# the HOCL story, quantitative: enabling the hierarchical lock moves
+# the p99 tail's attribution out of lock-protocol wait and into
+# NIC/data time (queue + service), and NIC queueing itself rises
+pre = res["+on-chip"]["obs"]["tail_attribution"]
+post = res["+hierarchical"]["obs"]["tail_attribution"]
+sherman = res["sherman"]["obs"]["tail_attribution"]
+for name, t in (("+hierarchical", post), ("sherman", sherman)):
+    assert t["lock_wait_frac"] < 0.8 * pre["lock_wait_frac"], \
+        ("HOCL must cut the tail lock share", name, t, pre)
+    assert t["nic_queue_frac"] > pre["nic_queue_frac"], \
+        ("HOCL must raise the tail NIC-queue share", name, t, pre)
+    assert (t["nic_queue_frac"] + t["service_frac"]
+            > pre["nic_queue_frac"] + pre["service_frac"]), (name, t, pre)
+locks = " ".join(
+    "{}: lock={:.2f}".format(
+        s, res[s]["obs"]["tail_attribution"]["lock_wait_frac"])
+    for s in ladder)
+print(f"obs OK: {locks} | sherman tail: "
+      f"nic={sherman['nic_queue_frac']:.3f} "
+      f"svc={sherman['service_frac']:.3f}")
+PYEOF
 
 echo "== open-loop CLI smoke (poisson arrivals) =="
 python -m repro.workloads --preset write-intensive --quick \
@@ -226,7 +288,7 @@ RESULT_FIELDS = {"mops", "p50_us", "p90_us", "p99_us", "counters", "system",
                  "per_cs", "conservation_ok", "arrival", "offered_mops",
                  "queue_mean_us", "queue_p50_us", "queue_p99_us",
                  "service_mean_us", "slo_us", "slo_attainment",
-                 "sustained_frac"}
+                 "sustained_frac", "obs"}
 COUNTER_KEYS = {"phases", "write_ops", "retried_ops", "read_ops",
                 "leaf_splits",
                 "internal_splits", "root_splits", "split_same_ms",
@@ -276,3 +338,6 @@ print("BENCH schema OK; cache smoke:",
       f"reads/lookup={c['reads_per_lookup']:.2f};",
       f"cluster smoke: {len(cl['per_cs'])} CS, {cl['rounds']} rounds")
 EOF
+
+echo "== bench regression vs committed baselines =="
+python scripts/check_bench_regression.py

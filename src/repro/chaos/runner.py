@@ -86,6 +86,17 @@ class ChaosRunner:
         return max(1, -(-self.spec.ops // per_round))
 
     # -- fault firing ------------------------------------------------------
+    def _log_fault(self, entry: dict) -> None:
+        """Append to the fault log and, when the cluster carries an
+        observability recorder, mark the event as an instant marker on
+        the recorded timeline (repro.obs)."""
+        self.fault_log.append(entry)
+        rec = self.cluster.recorder
+        if rec is not None:
+            rec.mark_fault(entry["kind"], entry["t_fault_s"],
+                           **{k: v for k, v in entry.items()
+                              if k not in ("kind", "t_fault_s")})
+
     def _fire_due(self) -> None:
         now = self.cluster.counters["sim_time_s"]
         while (self._fault_i < len(self.schedule)
@@ -102,23 +113,23 @@ class ChaosRunner:
     def _on_cs_leave(self, ev, now: float) -> None:
         cs = int(ev.cs)
         if not self.alive[cs] or sum(self.alive) <= 1:
-            self.fault_log.append(dict(kind="cs_leave", cs=cs,
-                                       t_fault_s=now, skipped=True))
+            self._log_fault(dict(kind="cs_leave", cs=cs,
+                                 t_fault_s=now, skipped=True))
             return
         self.alive[cs] = False
-        self.fault_log.append(dict(kind="cs_leave", cs=cs, t_fault_s=now))
+        self._log_fault(dict(kind="cs_leave", cs=cs, t_fault_s=now))
 
     def _on_cs_join(self, ev, now: float) -> None:
         cs = int(ev.cs)
         if self.alive[cs]:
-            self.fault_log.append(dict(kind="cs_join", cs=cs,
-                                       t_fault_s=now, skipped=True))
+            self._log_fault(dict(kind="cs_join", cs=cs,
+                                 t_fault_s=now, skipped=True))
             return
         self.alive[cs] = True
         # cold restart: the joining CS's private image is gone — its
         # first reads trigger full fills (the priced warm-up transient)
         self.cluster.nodes[cs].cache.reset()
-        self.fault_log.append(dict(kind="cs_join", cs=cs, t_fault_s=now))
+        self._log_fault(dict(kind="cs_join", cs=cs, t_fault_s=now))
 
     def _on_skew_shift(self, ev, now: float) -> None:
         kw = {}
@@ -131,7 +142,7 @@ class ChaosRunner:
         if ev.hot_n >= 1:
             kw["hot_n"] = ev.hot_n
         self.streams.shift_skew(**kw)
-        self.fault_log.append(dict(kind="skew_shift", t_fault_s=now, **{
+        self._log_fault(dict(kind="skew_shift", t_fault_s=now, **{
             k: (float(v) if isinstance(v, float) else v)
             for k, v in kw.items()}))
 
@@ -191,7 +202,7 @@ class ChaosRunner:
             restore_rows=rows_ms if ev.lose_memory else 0,
             small_bytes=cl.net.small_io_bytes)
         cl._simulate_merged([(rec_cs, trace)], "maint")
-        self.fault_log.append(dict(
+        self._log_fault(dict(
             kind="ms_crash", ms=int(ev.ms), t_fault_s=float(t0),
             t_restart_s=float(restart), down_s=float(ev.down_s),
             lose_memory=bool(ev.lose_memory),

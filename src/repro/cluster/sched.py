@@ -105,6 +105,9 @@ class Cluster:
         self.queue_read: list[np.ndarray] = []
         self.last_read_comp: dict = {}  # cs -> absolute lookup completions
         self.trace_log: Optional[list] = None     # merged-trace digests
+        # opt-in observability plane (repro.obs, DESIGN.md §14): attach a
+        # Recorder here and every merged wave captures its timeline
+        self.recorder = None
 
     @property
     def n_cs(self) -> int:
@@ -125,6 +128,7 @@ class Cluster:
         ``sim_time_s`` becomes the absolute horizon (max completion)
         instead of a sum of per-phase makespans."""
         self.clock = netsim.ServerClock.fresh(self.cfg.n_ms)
+        self.clock.recorder = self.recorder
 
     def record_traces(self) -> None:
         """Log a structural digest of every merged trace — everything
@@ -162,9 +166,16 @@ class Cluster:
             return None, []
         for cs, t in tagged:
             self.nodes[cs].note_trace(t)
+        rec = self.recorder
+        if rec is not None:
+            rec.set_phase(kind)
+            if self.clock is None:
+                # closed loop: place this wave's relative timeline at the
+                # accumulated sim time (open loop is already absolute)
+                rec.sync_cursor(self.counters["sim_time_s"])
         sim, merged = netsim.price_merged_phase(
             [t for _, t in tagged], self.features, self.net, self.cfg,
-            clock=self.clock)
+            clock=self.clock, recorder=rec)
         if self.trace_log is not None:
             self.trace_log.append(self._trace_digest(kind, merged))
         c = self.counters

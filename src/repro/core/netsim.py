@@ -113,6 +113,10 @@ class ServerClock:
 
     nic_free_ps: np.ndarray
     atomic_free_ps: np.ndarray
+    #: Optional observability-plane recorder (repro.obs) carried with the
+    #: clock across open-loop waves; replays on this clock capture into
+    #: it unless the caller passes an explicit recorder.
+    recorder: object | None = None
 
     @classmethod
     def fresh(cls, n_ms: int) -> "ServerClock":
@@ -202,8 +206,17 @@ def _finish_sim(trace: V.VerbTrace, comp_ps: np.ndarray,
 # the reference event loop (executable specification)
 # --------------------------------------------------------------------------
 
+def _resolve_recorder(recorder, clock):
+    """The replay's capture target: an explicit recorder wins, else the
+    one carried by the ServerClock (open-loop waves), else none."""
+    if recorder is not None:
+        return recorder
+    return clock.recorder if clock is not None else None
+
+
 def simulate_ref(trace: V.VerbTrace, net: NetConfig, n_ms: int,
-                 onchip: bool, clock: ServerClock | None = None) -> dict:
+                 onchip: bool, clock: ServerClock | None = None,
+                 recorder=None) -> dict:
     """Per-verb heapq replay — the specification :func:`simulate` must
     match tick-for-tick.
 
@@ -217,10 +230,14 @@ def simulate_ref(trace: V.VerbTrace, net: NetConfig, n_ms: int,
 
     With a :class:`ServerClock` the busy frontiers seed from (and write
     back to) the carried per-MS state — the open-loop absolute timeline.
+    ``recorder`` (or one carried by the clock) captures the replay's
+    per-verb timing after the fact — a pure observation, so recorded
+    and unrecorded runs are bit-identical (repro.obs.recorder).
     """
     n = trace.n_verbs
     if n == 0:
         return _empty_sim(trace.n_lanes)
+    rec = _resolve_recorder(recorder, clock)
     svc_a, cas_s, rtt, at_a = _grid_times(trace, net, onchip)
     svc = svc_a.tolist()
     kind = trace.kind.tolist()
@@ -278,9 +295,13 @@ def simulate_ref(trace: V.VerbTrace, net: NetConfig, n_ms: int,
     if clock is not None:
         clock.nic_free_ps[:] = nic_free
         clock.atomic_free_ps[:] = atomic_free
-    return _finish_sim(trace, np.asarray(comp, np.int64),
-                       np.asarray(wait, np.int64),
-                       np.asarray(start, np.int64))
+    comp_a = np.asarray(comp, np.int64)
+    wait_a = np.asarray(wait, np.int64)
+    start_a = np.asarray(start, np.int64)
+    if rec is not None:
+        rec.capture(trace, net, onchip, comp_a, wait_a, start_a,
+                    clocked=clock is not None)
+    return _finish_sim(trace, comp_a, wait_a, start_a)
 
 
 # --------------------------------------------------------------------------
@@ -288,7 +309,8 @@ def simulate_ref(trace: V.VerbTrace, net: NetConfig, n_ms: int,
 # --------------------------------------------------------------------------
 
 def simulate(trace: V.VerbTrace, net: NetConfig, n_ms: int,
-             onchip: bool, clock: ServerClock | None = None) -> dict:
+             onchip: bool, clock: ServerClock | None = None,
+             recorder=None) -> dict:
     """Vectorized structure-of-arrays replay, exactly equivalent to
     :func:`simulate_ref`.
 
@@ -310,11 +332,14 @@ def simulate(trace: V.VerbTrace, net: NetConfig, n_ms: int,
     recurrences and are written back afterwards (the open-loop absolute
     timeline).  The horizon argument is unaffected: a carried frontier
     only delays service starts, and per-MS FIFO order is decided by
-    ready times, which the frontier does not touch.
+    ready times, which the frontier does not touch.  ``recorder`` — see
+    :func:`simulate_ref`; the capture runs after the replay's last
+    ordering decision, so it cannot perturb the result.
     """
     n = trace.n_verbs
     if n == 0:
         return _empty_sim(trace.n_lanes)
+    rec = _resolve_recorder(recorder, clock)
     svc, cas_ps, rtt_ps, at = _grid_times(trace, net, onchip)
     ms = trace.ms.astype(np.int64)
     kind = trace.kind
@@ -429,6 +454,9 @@ def simulate(trace: V.VerbTrace, net: NetConfig, n_ms: int,
     if clock is not None:
         clock.nic_free_ps[:] = nic_free
         clock.atomic_free_ps[:] = atomic_free
+    if rec is not None:
+        rec.capture(trace, net, onchip, comp, wait, start,
+                    clocked=clock is not None)
     return _finish_sim(trace, comp, wait, start)
 
 
@@ -452,7 +480,8 @@ def transformed_write_trace(stats: dict, feat: Features, net: NetConfig,
 # phase pricing (the api.py entry points)
 # --------------------------------------------------------------------------
 
-def price_write_phase(stats: dict, feat: Features, net: NetConfig, cfg):
+def price_write_phase(stats: dict, feat: Features, net: NetConfig, cfg,
+                      recorder=None):
     """Price one write phase by verb-trace replay.
 
     ``stats`` holds numpy views of WriteStats (see
@@ -462,7 +491,7 @@ def price_write_phase(stats: dict, feat: Features, net: NetConfig, cfg):
     CAS), matching the paper's §5.5 reporting.
     """
     tr = transformed_write_trace(stats, feat, net, cfg)
-    sim = simulate(tr, net, cfg.n_ms, feat.onchip)
+    sim = simulate(tr, net, cfg.n_ms, feat.onchip, recorder=recorder)
     n = tr.n_lanes
     sim["mops"] = n / sim["makespan_s"] / 1e6 if sim["makespan_s"] else 0.0
     return sim
@@ -499,21 +528,23 @@ def read_trace_from_stats(stats: dict, cfg) -> V.VerbTrace:
                               scan=bool(stats.get("scan", False)))
 
 
-def price_read_phase(stats: dict, feat: Features, net: NetConfig, cfg):
+def price_read_phase(stats: dict, feat: Features, net: NetConfig, cfg,
+                     recorder=None):
     """Price a lookup/scan phase: sequential READ chains per lane
     (see :func:`read_trace_from_stats` for the trace semantics)."""
     n = int(np.asarray(stats["active"], bool).sum())
     if n == 0:
         return dict(_empty_sim(0), mops=0.0)
     tr = read_trace_from_stats(stats, cfg)
-    sim = simulate(tr, net, cfg.n_ms, feat.onchip)
+    sim = simulate(tr, net, cfg.n_ms, feat.onchip, recorder=recorder)
     sim["mops"] = n / sim["makespan_s"] / 1e6 if sim["makespan_s"] else 0.0
     return sim
 
 
 def price_merged_phase(traces: list[V.VerbTrace], feat: Features,
                        net: NetConfig, cfg,
-                       clock: ServerClock | None = None):
+                       clock: ServerClock | None = None,
+                       recorder=None):
     """Price one cluster wave: merge per-CS traces into one timeline and
     replay it against the *shared* per-MS resources.
 
@@ -527,18 +558,19 @@ def price_merged_phase(traces: list[V.VerbTrace], feat: Features,
     a fresh one.
     """
     merged = V.merge_traces(traces)
-    sim = simulate(merged, net, cfg.n_ms, feat.onchip, clock=clock)
+    sim = simulate(merged, net, cfg.n_ms, feat.onchip, clock=clock,
+                   recorder=recorder)
     return sim, merged
 
 
 def price_maintenance(node_reads: int, small_reads: int, feat: Features,
-                      net: NetConfig, cfg, rows_ms=None):
+                      net: NetConfig, cfg, rows_ms=None, recorder=None):
     """Price the CS cache's background traffic (image fills + version
     sweeps) by replaying its MAINT/SYNC read verbs."""
     tr = V.maintenance_trace(node_reads, small_reads, cfg.n_ms,
                              cfg.node_bytes, net.small_io_bytes,
                              rows_ms=rows_ms)
-    return simulate(tr, net, cfg.n_ms, feat.onchip)
+    return simulate(tr, net, cfg.n_ms, feat.onchip, recorder=recorder)
 
 
 # The closed-form counter pricing that used to live here (per-feature RTT

@@ -71,7 +71,8 @@ def station_trace(arrival_s: np.ndarray, nbytes: np.ndarray,
 def simulate_station(arrival_s, nbytes, net: NetConfig | None = None, *,
                      n_ms: int = 1, onchip: bool = True,
                      chunk: int | None = None,
-                     engine: str = "wavefront") -> dict:
+                     engine: str = "wavefront",
+                     recorder=None) -> dict:
     """Replay one admission queue against the event simulator.
 
     ``arrival_s`` must be sorted (an arrival stream); ``nbytes`` is the
@@ -91,7 +92,10 @@ def simulate_station(arrival_s, nbytes, net: NetConfig | None = None, *,
     nbytes = np.broadcast_to(np.asarray(nbytes, np.int64), (n,))
     sim_f = netsim.simulate if engine == "wavefront" else netsim.simulate_ref
     step = n if chunk is None else max(int(chunk), 1)
+    # the recorder rides the carried clock, so every chunked wave
+    # captures onto one absolute recorded timeline (repro.obs)
     clock = ServerClock.fresh(n_ms)
+    clock.recorder = recorder
     waits = np.zeros(n)
     comps = np.zeros(n)
     for lo in range(0, n, step):

@@ -65,6 +65,15 @@ def main(argv: Optional[list] = None) -> str:
     ap.add_argument("--slo-us", type=float, default=100.0,
                     help="sojourn SLO (us) used for slo_attainment in "
                          "open-loop runs (default 100)")
+    ap.add_argument("--record-trace", default=None, metavar="PATH",
+                    help="record the run through the observability plane "
+                         "(repro.obs, DESIGN.md §14) and export a "
+                         "Chrome/Perfetto trace-viewer JSON per system "
+                         "(multi-system runs suffix PATH with the system "
+                         "name); the BENCH json gains the obs breakdown")
+    ap.add_argument("--tail-k", type=int, default=16,
+                    help="top-K slowest ops kept in the tail-forensics "
+                         "table (default 16; needs --record-trace)")
     ap.add_argument("--seed", type=int, default=1)
     ap.add_argument("--quick", action="store_true",
                     help=f"CI-sized run ({QUICK})")
@@ -124,21 +133,26 @@ def main(argv: Optional[list] = None) -> str:
         ap.error("--rate only makes sense with --arrival")
     if args.slo_us <= 0:
         ap.error(f"--slo-us must be positive, got {args.slo_us}")
+    if args.tail_k <= 0:
+        ap.error(f"--tail-k must be positive, got {args.tail_k}")
 
+    recorders = {} if args.record_trace else None
+    rec_kw = dict(recorders=recorders, tail_k=args.tail_k)
     if args.arrival is not None:
         results = engine.run_open_loop_systems(
             spec, systems, n_clients=args.n_clients, seed=args.seed,
             cache_bytes=args.cache_bytes, cache_levels=args.cache_levels,
-            partitioned=args.partitioned, slo_us=args.slo_us)
+            partitioned=args.partitioned, slo_us=args.slo_us, **rec_kw)
     elif args.n_clients is not None:
         results = engine.run_cluster_systems(
             spec, systems, n_clients=args.n_clients, seed=args.seed,
             cache_bytes=args.cache_bytes, cache_levels=args.cache_levels,
-            partitioned=args.partitioned)
+            partitioned=args.partitioned, **rec_kw)
     else:
         results = engine.run_systems(spec, systems, seed=args.seed,
                                      cache_bytes=args.cache_bytes,
-                                     cache_levels=args.cache_levels)
+                                     cache_levels=args.cache_levels,
+                                     **rec_kw)
     print(f"{'system':18s} {'Mops':>8s} {'p50us':>8s} {'p99us':>10s} "
           f"{'dbl50':>6s} {'wr.B':>7s} {'hit%':>6s} {'rd/l':>5s} "
           f"{'dbells':>8s} {'saved':>7s}")
@@ -161,6 +175,26 @@ def main(argv: Optional[list] = None) -> str:
                   f"{r.service_mean_us:.2f} us, SLO({r.slo_us:.0f}us) "
                   f"attainment = {100 * r.slo_attainment:.1f}%, "
                   f"sustained = {100 * r.sustained_frac:.1f}%")
+
+    if recorders:
+        from repro.obs import write_chrome_trace
+        for r in results:
+            rec = recorders.get(r.system)
+            if rec is None:
+                continue
+            tp = args.record_trace
+            if len(results) > 1:            # one trace file per system
+                stem, dot, ext = tp.rpartition(".")
+                tp = (f"{stem}.{r.system}.{ext}" if dot
+                      else f"{tp}.{r.system}")
+            write_chrome_trace(rec, tp)
+            a = r.obs.get("tail_attribution", {})
+            print(f"  trace: {tp} ({rec.n_verbs} verbs, "
+                  f"tail p99 attribution: "
+                  f"nic={100 * a.get('nic_queue_frac', 0):.0f}% "
+                  f"atomic={100 * a.get('atomic_ser_frac', 0):.0f}% "
+                  f"lock={100 * a.get('lock_wait_frac', 0):.0f}% "
+                  f"svc={100 * a.get('service_frac', 0):.0f}%)")
 
     path = args.json or f"BENCH_{spec.name.replace('-', '_')}.json"
     engine.write_json(path, spec, results)

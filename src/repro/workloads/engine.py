@@ -97,6 +97,12 @@ class RunResult:
     slo_us: float = 0.0          # sojourn SLO this run was judged against
     slo_attainment: float = 0.0  # fraction of ops with sojourn <= slo_us
     sustained_frac: float = 0.0  # achieved/offered throughput (<= 1)
+    # Observability plane (repro.obs, DESIGN.md §14); empty unless a
+    # Recorder was attached to the run.  Carries the aggregate latency
+    # attribution (NIC queue / atomic serialization / lock wait /
+    # service), the top-K tail-forensics table, per-MS utilization, and
+    # the span-conservation verdict (repro.obs.metrics.summarize).
+    obs: dict = dataclasses.field(default_factory=dict)
 
     def to_dict(self) -> dict:
         return _pyify(dataclasses.asdict(self))
@@ -145,14 +151,29 @@ def _batch_counts(spec: WorkloadSpec, b: int) -> dict:
     return spec.batch_counts(b)
 
 
+def _obs_summary(recorder, tail_k: int) -> dict:
+    """``RunResult.obs`` payload for an optionally-recorded run."""
+    if recorder is None:
+        return {}
+    from repro.obs import summarize
+    return summarize(recorder, tail_k=tail_k)
+
+
 def run_workload(idx: ShermanIndex, spec: WorkloadSpec, *, seed: int = 1,
-                 keyspace: int = KEYSPACE, system: str = "") -> RunResult:
+                 keyspace: int = KEYSPACE, system: str = "",
+                 recorder=None, tail_k: int = 16) -> RunResult:
     """Run ``spec``'s op mix against ``idx`` and price it via netsim.
 
     The result reports only this run's deltas, so several runs may share one
-    index (e.g. a warmup pass followed by a measured pass).
+    index (e.g. a warmup pass followed by a measured pass).  ``recorder``
+    (a :class:`repro.obs.Recorder`) opts into the observability plane:
+    every priced phase captures its per-verb timeline and the result's
+    ``obs`` field carries the aggregate breakdown (top-``tail_k``
+    forensics included).
     """
     rng = np.random.default_rng(seed)
+    if recorder is not None:
+        idx.recorder = recorder
     c0 = dict(idx.counters)
     lw0, lr0 = len(idx.latencies_write), len(idx.latencies_read)
     db0, wb0 = len(idx.doorbells_write), len(idx.write_bytes)
@@ -202,7 +223,8 @@ def run_workload(idx: ShermanIndex, spec: WorkloadSpec, *, seed: int = 1,
     delta = {k: idx.counters[k] - c0.get(k, 0) for k in idx.counters}
     return _summarize(spec, delta, done, sim_s, lat_w, lat_r, dbells, wb,
                       system=system,
-                      op_counts={k: v for k, v in op_counts.items() if v})
+                      op_counts={k: v for k, v in op_counts.items() if v},
+                      obs=_obs_summary(recorder, tail_k))
 
 
 def _cat(arrs) -> np.ndarray:
@@ -247,12 +269,24 @@ def _summarize(spec: WorkloadSpec, delta: dict, done: int, sim_s: float,
         retried_ops=delta["retried_ops"], **extra)
 
 
+def _new_recorder(recorders: Optional[dict], name: str):
+    """A fresh per-system Recorder when the caller opted into recording
+    by passing a ``recorders`` dict (filled in as an out-parameter so
+    the CLI can export the captured timelines)."""
+    if recorders is None:
+        return None
+    from repro.obs import Recorder
+    recorders[name] = Recorder()
+    return recorders[name]
+
+
 def run_systems(spec: WorkloadSpec, systems: Sequence[str] = ("sherman",
                                                               "fg+"),
                 cfg: TreeConfig = DEFAULT_CFG, *, keyspace: int = KEYSPACE,
                 cache_bytes: int = 64 << 20,
                 cache_levels: Optional[int] = None,
-                seed: int = 1) -> list[RunResult]:
+                seed: int = 1, recorders: Optional[dict] = None,
+                tail_k: int = 16) -> list[RunResult]:
     """Run one spec against several named systems (fresh index each)."""
     out = []
     for name in systems:
@@ -265,7 +299,9 @@ def run_systems(spec: WorkloadSpec, systems: Sequence[str] = ("sherman",
                           keyspace=keyspace, cache_bytes=cache_bytes,
                           cache_levels=cache_levels)
         out.append(run_workload(idx, spec, seed=seed, keyspace=keyspace,
-                                system=name))
+                                system=name,
+                                recorder=_new_recorder(recorders, name),
+                                tail_k=tail_k))
     return out
 
 
@@ -275,7 +311,8 @@ def run_cluster_workload(spec: WorkloadSpec, features: Features, *,
                          cache_bytes: int = 64 << 20,
                          cache_levels: Optional[int] = None,
                          partitioned: bool = False, sync_rounds: int = 4,
-                         seed: int = 1, system: str = "") -> RunResult:
+                         seed: int = 1, system: str = "",
+                         recorder=None, tail_k: int = 16) -> RunResult:
     """Run one spec through the multi-CS cluster plane (DESIGN.md §11).
 
     ``n_clients`` concurrent client threads are spread over
@@ -291,6 +328,7 @@ def run_cluster_workload(spec: WorkloadSpec, features: Features, *,
                             cache_bytes=cache_bytes,
                             cache_levels=cache_levels,
                             sync_rounds=sync_rounds, seed=0)
+    cluster.recorder = recorder
     done, op_counts = run_cluster(cluster, spec, partitioned=partitioned,
                                   seed=seed, keyspace=keyspace)
     delta = cluster.combined_counters()
@@ -301,7 +339,8 @@ def run_cluster_workload(spec: WorkloadSpec, features: Features, *,
         _cat(cluster.doorbells_write), _cat(cluster.write_bytes),
         system=system, op_counts=op_counts, n_clients=cluster.n_clients,
         rounds=delta["rounds"], per_cs=per_cs,
-        conservation_ok=cluster.conservation_ok())
+        conservation_ok=cluster.conservation_ok(),
+        obs=_obs_summary(recorder, tail_k))
 
 
 def _per_cs_rows(cluster) -> list:
@@ -328,7 +367,8 @@ def run_open_loop_workload(spec: WorkloadSpec, features: Features, *,
                            cache_levels: Optional[int] = None,
                            partitioned: bool = False, sync_rounds: int = 4,
                            seed: int = 1, system: str = "",
-                           slo_us: float = 100.0) -> RunResult:
+                           slo_us: float = 100.0,
+                           recorder=None, tail_k: int = 16) -> RunResult:
     """Run one spec open-loop through the serving plane (DESIGN.md §12).
 
     Ops arrive per ``spec.arrival`` / ``spec.offered_mops`` instead of
@@ -346,6 +386,7 @@ def run_open_loop_workload(spec: WorkloadSpec, features: Features, *,
                             cache_bytes=cache_bytes,
                             cache_levels=cache_levels,
                             sync_rounds=sync_rounds, seed=0)
+    cluster.recorder = recorder   # enable_open_loop hands it to the clock
     done, op_counts, info = run_open_loop(cluster, spec, seed=seed,
                                           keyspace=keyspace,
                                           partitioned=partitioned)
@@ -373,7 +414,8 @@ def run_open_loop_workload(spec: WorkloadSpec, features: Features, *,
         slo_us=slo_us,
         slo_attainment=(float((lat <= slo_us * 1e-6).mean())
                         if lat.size else 0.0),
-        sustained_frac=(min(1.0, achieved / offered) if offered else 1.0))
+        sustained_frac=(min(1.0, achieved / offered) if offered else 1.0),
+        obs=_obs_summary(recorder, tail_k))
     return res
 
 
@@ -385,7 +427,9 @@ def run_open_loop_systems(spec: WorkloadSpec,
                           cache_levels: Optional[int] = None,
                           partitioned: bool = False, sync_rounds: int = 4,
                           seed: int = 1,
-                          slo_us: float = 100.0) -> list[RunResult]:
+                          slo_us: float = 100.0,
+                          recorders: Optional[dict] = None,
+                          tail_k: int = 16) -> list[RunResult]:
     """Open-loop analogue of :func:`run_cluster_systems`."""
     out = []
     for name in systems:
@@ -398,7 +442,8 @@ def run_open_loop_systems(spec: WorkloadSpec,
             spec, feat, n_clients=n_clients, cfg=cfg, keyspace=keyspace,
             cache_bytes=cache_bytes, cache_levels=cache_levels,
             partitioned=partitioned, sync_rounds=sync_rounds, seed=seed,
-            system=name, slo_us=slo_us))
+            system=name, slo_us=slo_us,
+            recorder=_new_recorder(recorders, name), tail_k=tail_k))
     return out
 
 
@@ -409,7 +454,8 @@ def run_cluster_systems(spec: WorkloadSpec,
                         cache_bytes: int = 64 << 20,
                         cache_levels: Optional[int] = None,
                         partitioned: bool = False, sync_rounds: int = 4,
-                        seed: int = 1) -> list[RunResult]:
+                        seed: int = 1, recorders: Optional[dict] = None,
+                        tail_k: int = 16) -> list[RunResult]:
     """Cluster-plane analogue of :func:`run_systems` (fresh fleet each)."""
     out = []
     for name in systems:
@@ -422,7 +468,8 @@ def run_cluster_systems(spec: WorkloadSpec,
             spec, feat, n_clients=n_clients, cfg=cfg, keyspace=keyspace,
             cache_bytes=cache_bytes, cache_levels=cache_levels,
             partitioned=partitioned, sync_rounds=sync_rounds, seed=seed,
-            system=name))
+            system=name, recorder=_new_recorder(recorders, name),
+            tail_k=tail_k))
     return out
 
 

@@ -1,0 +1,313 @@
+"""Observability plane (DESIGN.md §14): recorder neutrality, span
+conservation, and tail-forensics exactness.
+
+Three contracts, asserted across the ablation ladder and all three
+execution planes (single-frontend closed loop, merged cluster waves,
+open-loop serving on a carried clock):
+
+1. **Neutrality** — attaching a :class:`repro.obs.Recorder` is a pure
+   observation: every reported number (per-lane latencies, queueing,
+   counters, percentiles) is bit-identical to the unrecorded run.
+2. **Span conservation** — recorded per-MS NIC / atomic-unit busy spans
+   are non-overlapping per FIFO, reconcile with each verb's completion
+   tick with integer equality, and sum to the simulator's busy time;
+   closed-loop segments tile the engine's accumulated ``sim_time_s``.
+3. **Attribution exactness** — the tail-forensics critical-path walk
+   decomposes every op's latency into nic_queue + atomic_ser +
+   lock_wait + service with zero integer residual, and the HOCL ladder
+   rung shifts tail attribution from lock-protocol wait to NIC/data
+   time (the Fig. 10/11 story, now measurable per op).
+
+Plus seeded + hypothesis properties over randomly release-gated traces.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import TreeConfig, netsim, verbs as V
+from repro.core.netsim import (ABLATION_LADDER, FG_PLUS, SHERMAN, NetConfig,
+                               ServerClock)
+from repro.obs import (Recorder, attribute_ops, span_accounting, summarize,
+                       timeseries, to_chrome_trace, write_chrome_trace)
+from repro.workloads import SYSTEMS, build_index, get_preset, run_systems
+from repro.workloads.engine import (run_cluster_systems,
+                                    run_open_loop_systems, run_workload)
+
+from tests.test_netsim_trace import _one_write_phase
+
+CFG = TreeConfig(n_ms=2, nodes_per_ms=1024, fanout=8, n_locks_per_ms=512,
+                 max_height=6, n_cs=4)
+NET = NetConfig()
+TINY = dict(load_records=2_000, ops=256, batch=128)
+
+
+def _sim_equal(a: dict, b: dict) -> None:
+    assert a.keys() == b.keys()
+    for k in a:
+        x, y = a[k], b[k]
+        if isinstance(x, np.ndarray):
+            assert np.array_equal(x, y), k
+        else:
+            assert x == y, k
+
+
+def _result_equal(a, b) -> None:
+    """Two RunResults are identical apart from the obs payload."""
+    da, db = a.to_dict(), b.to_dict()
+    da.pop("obs"), db.pop("obs")
+    assert da == db
+
+
+# --------------------------------------------------------------------------
+# 1. neutrality: recording is a pure observation
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", [netsim.simulate, netsim.simulate_ref],
+                         ids=["wavefront", "ref"])
+def test_engine_neutrality_write_trace(engine):
+    sd = _one_write_phase()
+    tr = netsim.transformed_write_trace(sd, SHERMAN, NET, CFG)
+    rec = Recorder()
+    _sim_equal(engine(tr, NET, CFG.n_ms, True),
+               engine(tr, NET, CFG.n_ms, True, recorder=rec))
+    assert rec.n_segments == 1 and rec.n_verbs == tr.n_verbs
+
+
+def test_engine_neutrality_clocked_shift_release():
+    """Open-loop idiom: a release-gated trace on a carried clock, with
+    the recorder riding the clock across split waves."""
+    sd = _one_write_phase()
+    tr = netsim.transformed_write_trace(sd, SHERMAN, NET, CFG)
+    rng = np.random.default_rng(5)
+    gated = V.shift_release(tr, np.sort(rng.uniform(0, 5e-5, tr.n_lanes)))
+    base = netsim.simulate(gated, NET, CFG.n_ms, True,
+                           clock=ServerClock.fresh(CFG.n_ms))
+    clock = ServerClock.fresh(CFG.n_ms)
+    clock.recorder = Recorder()
+    _sim_equal(base, netsim.simulate(gated, NET, CFG.n_ms, True, clock=clock))
+    (seg,) = clock.recorder.segments
+    assert seg.clocked and seg.t0_ps == 0
+
+
+@pytest.mark.parametrize("name", [n for n, _ in ABLATION_LADDER])
+def test_workload_neutrality_ladder(name):
+    spec = get_preset("ycsb-a", **TINY)
+    base = run_systems(spec, [name], CFG)[0]
+    recs = {}
+    on = run_systems(spec, [name], CFG, recorders=recs, tail_k=8)[0]
+    _result_equal(base, on)
+    assert base.obs == {} and on.obs["verbs"] == recs[name].n_verbs
+
+
+def test_cluster_and_open_loop_neutrality():
+    """Merged cross-CS GLT-chain waves and open-loop admission: both
+    planes are bit-identical under recording."""
+    spec = get_preset("write-intensive", **TINY)
+    base = run_cluster_systems(spec, ["sherman"], n_clients=8, cfg=CFG)[0]
+    on = run_cluster_systems(spec, ["sherman"], n_clients=8, cfg=CFG,
+                             recorders={}, tail_k=8)[0]
+    _result_equal(base, on)
+
+    ol = get_preset("ycsb-a", **TINY).replace(arrival="poisson",
+                                              offered_mops=1.0)
+    base = run_open_loop_systems(ol, ["sherman"], n_clients=8, cfg=CFG)[0]
+    recs = {}
+    on = run_open_loop_systems(ol, ["sherman"], n_clients=8, cfg=CFG,
+                               recorders=recs, tail_k=8)[0]
+    _result_equal(base, on)
+    assert all(s.clocked for s in recs["sherman"].segments)
+
+
+# --------------------------------------------------------------------------
+# 2. span conservation
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", [n for n, _ in ABLATION_LADDER])
+def test_span_accounting_ladder(name):
+    """Per-FIFO busy spans are non-overlapping, reconcile per verb, and
+    sum to the simulator's busy time (independently recomputed from the
+    recorded traces' grid constants)."""
+    spec = get_preset("write-intensive", **TINY)
+    recs = {}
+    run_systems(spec, [name], CFG, recorders=recs, tail_k=4)
+    rec = recs[name]
+    acc = span_accounting(rec)
+    assert acc["ok"]
+    want_nic = np.zeros(acc["n_ms"], np.int64)
+    want_atomic = np.zeros(acc["n_ms"], np.int64)
+    for seg in rec.segments:
+        np.add.at(want_nic, seg.ms, seg.svc_ps)
+        cm = seg.kind == V.CAS
+        np.add.at(want_atomic, seg.ms[cm],
+                  np.full(int(cm.sum()), seg.cas_ps, np.int64))
+    assert np.allclose(acc["nic_busy_s"],
+                       want_nic / netsim.PS_PER_S, rtol=0, atol=0)
+    assert np.allclose(acc["atomic_busy_s"],
+                       want_atomic / netsim.PS_PER_S, rtol=0, atol=0)
+
+
+def test_segments_tile_sim_time():
+    """Closed-loop segments sit end-to-end on the engine's accumulated
+    ``sim_time_s`` timeline: each capture's t0 equals the counter before
+    its phase, and the final horizon matches the final counter."""
+    spec = get_preset("ycsb-a", **TINY)
+    idx = build_index(SYSTEMS["sherman"], CFG, records=spec.load_records)
+    rec = Recorder()
+    r = run_workload(idx, spec, system="sherman", recorder=rec, tail_k=4)
+    t0s = [s.t0_ps for s in rec.segments]
+    assert t0s == sorted(t0s)
+    horizon = max(s.t0_ps + s.makespan_ps for s in rec.segments)
+    assert horizon / netsim.PS_PER_S == pytest.approx(
+        idx.counters["sim_time_s"], rel=1e-9)
+    assert r.obs["horizon_s"] == pytest.approx(horizon / netsim.PS_PER_S)
+
+
+# --------------------------------------------------------------------------
+# 3. tail forensics: exact attribution + the HOCL shift
+# --------------------------------------------------------------------------
+
+def test_attribution_sums_exactly_top64():
+    """Acceptance: for the top-64 slowest ops the four components sum to
+    the op's latency with zero integer residual."""
+    spec = get_preset("write-intensive", load_records=2_000, ops=512,
+                      batch=256, theta=0.99)
+    recs = {}
+    run_systems(spec, ["sherman", "+on-chip"], CFG, recorders=recs,
+                tail_k=64)
+    for rec in recs.values():
+        rows = attribute_ops(rec, top_k=64)
+        assert len(rows) == 64
+        for r in rows:
+            assert r["residual_ps"] == 0
+            assert min(r["nic_queue_us"], r["atomic_ser_us"],
+                       r["lock_wait_us"], r["service_us"]) >= 0
+
+
+def test_hocl_shifts_tail_attribution():
+    """The Fig. 10/11 mechanism, per op: enabling HOCL removes the
+    per-handover CAS+UNLOCK round trips, so the p99 tail's lock-protocol
+    share drops and the NIC/data share (queue + service) rises."""
+    spec = get_preset("write-intensive", load_records=2_000, ops=512,
+                      batch=256, theta=0.99)
+    recs = {}
+    run_systems(spec, ["+on-chip", "+hierarchical"], CFG, recorders=recs,
+                tail_k=64)
+    pre = summarize(recs["+on-chip"], tail_k=64)["tail_attribution"]
+    post = summarize(recs["+hierarchical"], tail_k=64)["tail_attribution"]
+    assert post["lock_wait_frac"] < pre["lock_wait_frac"]
+    assert (post["nic_queue_frac"] + post["service_frac"]
+            > pre["nic_queue_frac"] + pre["service_frac"])
+
+
+def test_flat_rungs_pay_atomic_serialization():
+    """Pre-on-chip rungs serialize spin CASes on the software atomic
+    unit; the attribution walk must surface that as atomic_ser."""
+    spec = get_preset("write-intensive", load_records=2_000, ops=512,
+                      batch=256, theta=0.99)
+    recs = {}
+    run_systems(spec, ["fg+", "sherman"], CFG, recorders=recs, tail_k=64)
+    fg = summarize(recs["fg+"], tail_k=64)
+    sh = summarize(recs["sherman"], tail_k=64)
+    assert fg["tail_attribution"]["atomic_ser_frac"] > 0.05
+    assert sh["tail_attribution"]["atomic_ser_frac"] == pytest.approx(0.0)
+
+
+# --------------------------------------------------------------------------
+# 4. export: trace-viewer JSON + derived series
+# --------------------------------------------------------------------------
+
+def test_chaos_run_exports_valid_trace(tmp_path):
+    """Acceptance: an open-loop-style chaos run (crash + failover on the
+    shared timeline) exports a valid Chrome/Perfetto trace with fault
+    markers, and the forensic invariants survive the time jump."""
+    from repro.chaos import ChaosRunner
+    from repro.cluster import build_cluster
+    from repro.workloads.spec import FaultEvent, WorkloadSpec
+
+    spec = WorkloadSpec(name="chaos-mix", read=0.3, update=0.3, insert=0.2,
+                        delete=0.1, rmw=0.1, load_records=2_000, ops=384,
+                        batch=128,
+                        faults=(FaultEvent(kind="ms_crash", at_s=2e-4, ms=1),
+                                FaultEvent(kind="cs_leave", at_s=4e-4,
+                                           cs=2)))
+    cl = build_cluster(SHERMAN, CFG, n_clients=8, records=2_000,
+                      cache_bytes=4 << 20, sync_rounds=2)
+    rec = Recorder()
+    cl.recorder = rec
+    ChaosRunner(cl, spec, seed=1).run()
+    assert [f["kind"] for f in rec.faults] == ["ms_crash", "cs_leave"]
+    t0s = [s.t0_ps for s in rec.segments]
+    assert t0s == sorted(t0s)          # segments follow the crash jump
+    s = summarize(rec, tail_k=16)
+    assert s["attr_residual_ps"] == 0 and s["spans_ok"]
+
+    path = tmp_path / "chaos.trace.json"
+    write_chrome_trace(rec, str(path))
+    doc = json.loads(path.read_text())
+    ev = doc["traceEvents"]
+    phases = {e["ph"] for e in ev}
+    assert {"X", "M", "i", "C"} <= phases
+    assert sum(e["ph"] == "i" for e in ev) == 2
+    for e in ev:
+        if e["ph"] == "X":
+            assert e["dur"] >= 0 and e["ts"] >= 0
+
+
+def test_timeseries_shapes_and_bounds():
+    spec = get_preset("write-intensive", **TINY)
+    recs = {}
+    run_systems(spec, ["sherman"], CFG, recorders=recs, tail_k=4)
+    ts = timeseries(recs["sherman"], buckets=32)
+    util = np.asarray(ts["nic_util"])
+    assert util.shape == (CFG.n_ms, 32)
+    assert (util >= 0).all() and (util <= 1 + 1e-9).all()
+    assert len(ts["t_s"]) == 32
+    assert all(row["lock_verbs"] >= row["chained"] >= 0
+               for row in ts["lock_chain"])
+
+
+def test_summary_is_json_and_in_run_result(tmp_path):
+    spec = get_preset("ycsb-a", **TINY)
+    recs = {}
+    (r,) = run_systems(spec, ["sherman"], CFG, recorders=recs, tail_k=8)
+    json.dumps(r.to_dict())
+    assert len(r.obs["tail"]) == 8
+    assert r.obs["p99_latency_us"] > 0
+    assert set(r.obs["attribution"]) >= {
+        "nic_queue_frac", "atomic_ser_frac", "lock_wait_frac",
+        "service_frac"}
+
+
+# --------------------------------------------------------------------------
+# 5. hypothesis: neutrality + exactness under random release gates
+# --------------------------------------------------------------------------
+
+def test_hypothesis_gated_trace_invariants():
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    sd = _one_write_phase()
+
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1),
+           span_us=st.floats(0.1, 100.0),
+           feat_i=st.integers(0, len(ABLATION_LADDER) - 1),
+           clocked=st.booleans())
+    def prop(seed, span_us, feat_i, clocked):
+        feat = ABLATION_LADDER[feat_i][1]
+        tr = netsim.transformed_write_trace(sd, feat, NET, CFG)
+        rng = np.random.default_rng(seed)
+        gated = V.shift_release(tr, rng.uniform(0, span_us * 1e-6,
+                                                tr.n_lanes))
+        clock = ServerClock.fresh(CFG.n_ms) if clocked else None
+        base = netsim.simulate(gated, NET, CFG.n_ms, feat.onchip,
+                               clock=ServerClock.fresh(CFG.n_ms)
+                               if clocked else None)
+        rec = Recorder()
+        _sim_equal(base, netsim.simulate(gated, NET, CFG.n_ms, feat.onchip,
+                                         clock=clock, recorder=rec))
+        assert span_accounting(rec)["ok"]
+        assert all(r["residual_ps"] == 0 for r in attribute_ops(rec))
+
+    prop()
